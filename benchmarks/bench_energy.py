@@ -1,0 +1,81 @@
+"""Table 4: energy efficiency (fps/W) — DONN analytical model vs measured
+digital baselines (MLP + CNN) on this host.
+
+DONN power model (paper §5.4): CW laser ~5mW + CMOS detector ~1W @
+1000 fps at 200x200 => ~995 fps/W; diffractive layers are passive.
+Digital baselines: measured fps on this CPU / assumed package power."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+
+CPU_WATTS = 125.0  # assumed package TDP for fps/W (documented assumption)
+
+
+def _mlp_params(key, n_in=40000, hidden=128, n_out=10):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (n_in, hidden)) * 0.01,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, n_out)) * 0.01,
+        "b2": jnp.zeros((n_out,)),
+    }
+
+
+def _mlp(p, x):  # x (B, 200, 200) flattened
+    h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def _cnn_params(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "c1": jax.random.normal(k1, (5, 5, 1, 32)) * 0.05,
+        "c2": jax.random.normal(k2, (5, 5, 32, 64)) * 0.05,
+        "w1": jax.random.normal(k3, (64 * 13 * 13, 128)) * 0.01,
+        "w2": jax.random.normal(k4, (128, 10)) * 0.05,
+    }
+
+
+def _cnn(p, x):  # paper's CNN: 2 conv(5x5,s2,p2) + 2 maxpool(3x3,s2) + 2 fc
+    x = x[..., None]
+    for w in (p["c1"], p["c2"]):
+        x = jax.lax.conv_general_dilated(
+            x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+    h = jax.nn.relu(x.reshape(x.shape[0], -1) @ p["w1"])
+    return h @ p["w2"]
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (1, 200, 200))  # batch 1 (paper setting)
+
+    mlp = jax.jit(_mlp)
+    us = time_fn(mlp, _mlp_params(key), x, iters=20)
+    fps = 1e6 / us
+    row("table4/mlp_cpu", us,
+        f"fps={fps:.0f},fps_per_watt={fps / CPU_WATTS:.2f}")
+
+    cnn = jax.jit(_cnn)
+    us = time_fn(cnn, _cnn_params(key), x, iters=20)
+    fps_c = 1e6 / us
+    row("table4/cnn_cpu", us,
+        f"fps={fps_c:.0f},fps_per_watt={fps_c / CPU_WATTS:.2f}")
+
+    donn_fpw = 1000.0 / (1.0 + 0.005)  # 1000 fps / (1W detector + 5mW laser)
+    row("table4/donn_prototype", 1e6 / 1000.0,
+        f"fps=1000,fps_per_watt={donn_fpw:.0f},"
+        f"vs_mlp={donn_fpw / (fps / CPU_WATTS):.0f}x,"
+        f"vs_cnn={donn_fpw / (fps_c / CPU_WATTS):.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Roofline table: read artifacts/dryrun/*.json and print the per-cell
+three-term analysis (EXPERIMENTS.md §Roofline reads from this)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import row
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def main():
+    if not ART.exists():
+        row("roofline/missing", 0.0,
+            "run `python -m repro.launch.dryrun --all` first")
+        return
+    recs = []
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs if str(r.get("status", "")).startswith("SKIP"))
+    n_fail = len(recs) - n_ok - n_skip
+    row("roofline/summary", 0.0,
+        f"cells={len(recs)},ok={n_ok},skip={n_skip},fail={n_fail}")
+    for r in recs:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") != "ok":
+            row(f"roofline/{tag}", 0.0, str(r.get("status"))[:60])
+            continue
+        t = r["terms"]
+        step_s = max(t.values())
+        row(
+            f"roofline/{tag}",
+            step_s * 1e6,
+            f"dom={r['dominant'].replace('_s','')},"
+            f"comp={t['compute_s']:.3g},mem={t['memory_s']:.3g},"
+            f"coll={t['collective_s']:.3g},"
+            f"frac={r['roofline_fraction']:.3g},"
+            f"fits={r['memory']['fits_16GiB_hbm']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 8: LightRidge vs LightPipes-style engine runtime across system
+sizes and depths (reduced sizes for the CPU container; same shape of
+comparison: batched+jit'd+cached-TF vs per-sample eager float128 loop)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, time_host_fn
+from repro.core import DONNConfig, build_model
+from repro.core.baselines import LightPipesLikeEngine
+from repro.core.diffraction import Grid
+
+
+def main():
+    batch = 8
+    for n in (64, 128, 256):
+        for depth in (1, 3, 5):
+            cfg = DONNConfig(name="b", n=n, depth=depth, distance=0.05,
+                             det_size=max(4, n // 8))
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            r = np.random.default_rng(0)
+            x = r.random((batch, 28, 28)).astype(np.float32)
+            xj = jnp.asarray(x)
+            fwd = jax.jit(lambda p, v: model.apply(p, v))
+            us_ours = time_fn(fwd, params, xj)
+
+            eng = LightPipesLikeEngine(Grid(n, cfg.pixel_size), cfg.wavelength)
+            phases = [np.asarray(params["phase"][f"layer_{i}"])
+                      for i in range(depth)]
+            dists = cfg.gap_distances()
+            # baseline consumes the n x n embedded input
+            from repro.core.laser import resize_to_grid
+
+            xn = np.asarray(resize_to_grid(xj, n))
+            us_base = time_host_fn(
+                lambda: eng.donn_forward(xn, phases, dists), warmup=1, iters=2
+            )
+            row(f"fig8/lightridge/n{n}/d{depth}", us_ours,
+                f"speedup={us_base / us_ours:.1f}x")
+            row(f"fig8/lightpipes_like/n{n}/d{depth}", us_base, "baseline")
+
+
+if __name__ == "__main__":
+    main()

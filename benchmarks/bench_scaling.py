@@ -1,0 +1,46 @@
+"""Fig. 10: large-scale DONN training runtime vs depth (reduced sizes).
+
+Paper claim: runtime grows ~linearly with depth.  We fit per-step time
+against depth and report the linearity (R^2 of the linear fit)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import DONNConfig, build_model
+from repro.core.train_utils import make_train_step
+from repro.optim import AdamW
+
+
+def main():
+    n, batch = 128, 16
+    depths = (5, 10, 20, 30)
+    times = []
+    for depth in depths:
+        cfg = DONNConfig(name="xl", n=n, depth=depth, distance=0.05,
+                         det_size=16)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(lr=0.1)
+        opt_state = opt.init(params)
+        step = make_train_step(model, opt, 10)
+        r = np.random.default_rng(0)
+        xb = jnp.asarray(r.random((batch, 28, 28)), jnp.float32)
+        yb = jnp.asarray(r.integers(0, 10, batch), jnp.int32)
+        us = time_fn(step, params, opt_state, jnp.asarray(0), xb, yb,
+                     jax.random.PRNGKey(0), warmup=1, iters=3)
+        times.append(us)
+        row(f"fig10/train_step/n{n}/depth{depth}", us,
+            f"us_per_layer={us / depth:.0f}")
+    d = np.asarray(depths, float)
+    t = np.asarray(times)
+    coef = np.polyfit(d, t, 1)
+    pred = np.polyval(coef, d)
+    r2 = 1 - np.sum((t - pred) ** 2) / np.sum((t - t.mean()) ** 2)
+    row("fig10/linearity", 0.0, f"R2_linear_fit={r2:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Shared benchmark utilities. Every benchmark prints CSV rows:
+``name,us_per_call,derived`` (derived = the paper-facing quantity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Wall-time a callable returning jax arrays; us per call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Wall-time a pure-host (numpy) callable; us per call."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)

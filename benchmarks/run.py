@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
+  fig5+table3 -> bench_dse          fig7  -> bench_regularization
+  fig8        -> bench_runtime      fig9  -> bench_kernel_breakdown
+  fig10       -> bench_scaling      table4 -> bench_energy
+  table5      -> bench_rgb          fig13 -> bench_segmentation
+  (env)       -> bench_roofline (reads the dry-run artifacts)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_dse,
+        bench_energy,
+        bench_kernel_breakdown,
+        bench_regularization,
+        bench_rgb,
+        bench_roofline,
+        bench_runtime,
+        bench_scaling,
+        bench_segmentation,
+    )
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = [
+        ("fig8_runtime", bench_runtime.main),
+        ("fig9_kernel_breakdown", bench_kernel_breakdown.main),
+        ("fig10_scaling", bench_scaling.main),
+        ("fig7_regularization", bench_regularization.main),
+        ("fig5_table3_dse", bench_dse.main),
+        ("table4_energy", bench_energy.main),
+        ("table5_rgb", bench_rgb.main),
+        ("fig13_segmentation", bench_segmentation.main),
+        ("roofline", bench_roofline.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

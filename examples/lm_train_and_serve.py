@@ -1,0 +1,39 @@
+"""Train a reduced LM config for a few hundred steps with checkpointing,
+then serve it with the continuous-batching decode loop.
+
+    PYTHONPATH=src python examples/lm_train_and_serve.py [arch]
+
+The same launchers scale to the production meshes (launch/dryrun.py proves
+compilation for the full configs on 512 chips).
+"""
+import sys
+import tempfile
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "granite-8b"
+    ckpt = tempfile.mkdtemp(prefix="lm_ck_")
+    print(f"== training {arch} (smoke config, 200 steps) ==")
+    train_mod.main([
+        "--arch", arch, "--smoke", "--steps", "200", "--batch", "8",
+        "--seq", "128", "--lr", "3e-3", "--warmup", "20",
+        "--ckpt-dir", ckpt, "--ckpt-every", "50", "--log-every", "25",
+    ])
+    print(f"== resuming from checkpoint for 50 more steps ==")
+    train_mod.main([
+        "--arch", arch, "--smoke", "--steps", "250", "--batch", "8",
+        "--seq", "128", "--lr", "3e-3", "--warmup", "20",
+        "--ckpt-dir", ckpt, "--ckpt-every", "50", "--log-every", "25",
+    ])
+    print(f"== serving {arch} ==")
+    serve_mod.main([
+        "--arch", arch, "--smoke", "--slots", "8", "--requests", "16",
+        "--prompt-len", "8", "--max-new", "16", "--cache-len", "128",
+    ])
+
+
+if __name__ == "__main__":
+    main()

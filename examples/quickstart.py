@@ -1,0 +1,58 @@
+"""Quickstart: build, train, evaluate and export a DONN with the DSL.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Mirrors the paper's front-end flow (Table 2): lr.laser -> lr.layers ->
+lr.models.sequential -> train -> lr.layers.weight_fab export.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.dsl as lr
+from repro.core import codesign as cd
+from repro.core.regularization import calibrate_gamma
+from repro.core.train_utils import evaluate_classifier, train_classifier
+from repro.data import batch_iterator, synth_digits
+
+
+def main():
+    # 1. describe the optical system (reduced 64x64 for CPU speed)
+    src = lr.laser(wavelength=532e-9, profile="plane")
+    layers = [
+        lr.layers.diffractlayer_raw(distance=0.05, pixel_size=36e-6, size=64)
+        for _ in range(3)
+    ]
+    det = lr.layers.detector(num_classes=10, det_size=8, distance=0.05)
+    model, cfg = lr.models.sequential(layers, det, laser=src, name="quickstart")
+    print(f"built {cfg.name}: {cfg.depth} layers @ {cfg.n}x{cfg.n}, "
+          f"lambda={cfg.wavelength*1e9:.0f}nm")
+
+    # 2. physics-aware gamma calibration (paper §3.2)
+    params = model.init(jax.random.PRNGKey(0))
+    xs, ys = synth_digits(1024, seed=0)
+    g = calibrate_gamma(model, params, jnp.asarray(xs[:16]))
+    import dataclasses
+
+    model = lr.from_config(dataclasses.replace(cfg, gamma=g))
+    print(f"calibrated gamma = {g:.3f}")
+
+    # 3. train (Adam + MSE-softmax, per the paper)
+    res = train_classifier(
+        model, params, batch_iterator(xs, ys, 64, seed=1),
+        steps=150, lr=0.5, log_every=30,
+    )
+    acc = evaluate_classifier(model, res.params,
+                              batch_iterator(xs, ys, 128, seed=2), 4)
+    print(f"train {res.wall_time_s:.1f}s; eval accuracy {acc:.3f}")
+
+    # 4. hardware export: quantize phases to 8-bit SLM levels
+    dev = cd.DeviceSpec(levels=256)
+    for name, phi in res.params["phase"].items():
+        img = cd.to_slm(phi, dev)
+        print(f"  {name}: SLM pattern {img.shape} uint8, "
+              f"levels used {len(np.unique(img))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Sharded, atomic, integrity-checked checkpoint store.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000042/
+        MANIFEST.json        # leaf paths, shapes, dtypes, chunking, crc32
+        leaf_00000.c00.npy   # chunk files (split along axis 0, ~64MB each)
+        ...
+      LATEST                 # atomically-updated pointer file
+
+Commit protocol: write everything into ``step_N.tmp/``, fsync, rename to
+``step_N/`` (atomic on POSIX), then rewrite LATEST via tmp+rename.  A crash
+at any point leaves either the old or the new checkpoint fully valid.
+
+Restore is *elastic*: chunk files reassemble the full logical array, which
+is then ``device_put`` with whatever sharding the current mesh prescribes —
+restoring a 16x16 checkpoint into a 4x2 mesh (or vice versa) just reslices.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+try:  # bf16/f8 etc. aren't native numpy dtypes
+    import ml_dtypes
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+
+CHUNK_BYTES = 64 << 20
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        if ml_dtypes is not None and hasattr(ml_dtypes, name):
+            return np.dtype(getattr(ml_dtypes, name))
+        raise
+
+
+def _save_chunk(path, chunk: np.ndarray):
+    """Serialize via raw bytes: robust for ml_dtypes (bf16) round-trips."""
+    np.save(path, np.frombuffer(
+        np.ascontiguousarray(chunk).tobytes(), np.uint8
+    ))
+
+
+def _load_chunk(path, dtype: str, shape) -> np.ndarray:
+    buf = np.load(path)
+    return np.frombuffer(buf.tobytes(), dtype=_np_dtype(dtype)).reshape(shape)
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_paths(tree):
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save(ckpt_dir, step: int, state, *, keep: int = 3, verify: bool = True):
+    """Blocking save with atomic commit. Returns the final directory."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        import shutil
+
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    host_state = jax.device_get(state)
+    leaves, _ = _flatten(host_state)
+    names = _leaf_paths(host_state)
+    manifest = {"step": step, "leaves": []}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(leaf)
+        entry = {
+            "name": name,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "chunks": [],
+        }
+        if arr.ndim == 0 or arr.nbytes <= CHUNK_BYTES:
+            splits = [(0, arr.shape[0] if arr.ndim else 0, arr)]
+        else:
+            rows_per = max(1, int(CHUNK_BYTES / max(arr.nbytes / arr.shape[0], 1)))
+            splits = [
+                (r, min(r + rows_per, arr.shape[0]),
+                 arr[r : min(r + rows_per, arr.shape[0])])
+                for r in range(0, arr.shape[0], rows_per)
+            ]
+        for ci, (r0, r1, chunk) in enumerate(splits):
+            fname = f"leaf_{i:05d}.c{ci:03d}.npy"
+            _save_chunk(tmp / fname, chunk)
+            entry["chunks"].append({
+                "file": fname, "row0": int(r0), "row1": int(r1),
+                "shape": list(np.shape(chunk)),
+                "crc32": (zlib.crc32(np.ascontiguousarray(chunk).tobytes())
+                          if verify else None),
+            })
+        manifest["leaves"].append(entry)
+    with open(tmp / "MANIFEST.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():  # idempotent re-save of the same step
+        import shutil
+
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _write_latest(ckpt_dir, final.name)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _write_latest(ckpt_dir: pathlib.Path, name: str):
+    tmp = ckpt_dir / "LATEST.tmp"
+    tmp.write_text(name)
+    os.rename(tmp, ckpt_dir / "LATEST")
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(d for d in ckpt_dir.iterdir()
+                   if d.is_dir() and d.name.startswith("step_")
+                   and not d.name.endswith(".tmp"))
+    import shutil
+
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ptr = ckpt_dir / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (ckpt_dir / name / "MANIFEST.json").exists():
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
+            verify: bool = False):
+    """Restore into the structure of ``target_tree``.
+
+    ``target_tree`` provides the pytree structure (values ignored);
+    ``shardings`` (same structure, optional) gives per-leaf shardings for
+    elastic placement onto the current mesh.
+    """
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    leaves, treedef = _flatten(target_tree)
+    if len(manifest["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"target expects {len(leaves)}"
+        )
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None
+        else [None] * len(leaves)
+    )
+    out = []
+    for entry, sh in zip(manifest["leaves"], shard_leaves):
+        shape = tuple(entry["shape"])
+        arr = np.empty(shape, _np_dtype(entry["dtype"]))
+        for ch in entry["chunks"]:
+            chunk = _load_chunk(d / ch["file"], entry["dtype"],
+                                tuple(ch.get("shape", shape)))
+            if verify and ch.get("crc32") is not None:
+                crc = zlib.crc32(np.ascontiguousarray(chunk).tobytes())
+                if crc != ch["crc32"]:
+                    raise IOError(f"crc mismatch in {ch['file']}")
+            if arr.ndim == 0:
+                arr = chunk
+            else:
+                arr[ch["row0"] : ch["row1"]] = chunk
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+class AsyncCheckpointer:
+    """Snapshot on the caller thread, serialize/commit on a worker thread."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state):
+        self.wait()
+        host_state = jax.device_get(state)  # consistent snapshot
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_state, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,24 @@
+"""Architecture registry: importing this package registers every config."""
+from repro.configs import (  # noqa: F401
+    arctic_480b,
+    donn,
+    falcon_mamba_7b,
+    glm4_9b,
+    granite_8b,
+    llama_3_2_vision_11b,
+    mixtral_8x7b,
+    musicgen_medium,
+    qwen1_5_4b,
+    qwen2_5_14b,
+    recurrentgemma_9b,
+)
+
+LM_ARCHS = (
+    "glm4-9b", "granite-8b", "qwen1.5-4b", "qwen2.5-14b", "mixtral-8x7b",
+    "arctic-480b", "llama-3.2-vision-11b", "musicgen-medium",
+    "falcon-mamba-7b", "recurrentgemma-9b",
+)
+DONN_ARCHS = (
+    "donn-mnist-3l", "donn-mnist-5l", "donn-chip", "donn-rgb", "donn-seg",
+    "donn-xl-500",
+)

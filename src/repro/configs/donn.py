@@ -1,0 +1,93 @@
+"""The paper's own DONN architectures as first-class configs.
+
+- donn-mnist-3l : the physically-prototyped 3-layer system (paper §5.1):
+                  200x200, 36um pixels, 532nm, z=0.28m (11 in).
+- donn-mnist-5l : the DSE-explored 5-layer system (paper §4/§5.2), z=0.30m.
+- donn-chip     : the on-chip integration case study (paper §5.5):
+                  3.45um CMOS pixels, z=532um, 200x200.
+- donn-rgb      : the multi-channel RGB classifier (paper Fig. 12).
+- donn-seg      : the segmentation DONN with optical skip + LN (Fig. 13).
+- donn-xl-500   : the large-scale emulation workload (Fig. 10): 500^2, 30 layers.
+"""
+from repro.core.config import DONNConfig
+from repro.models.config import register
+
+
+@register("donn-mnist-3l")
+def donn3():
+    full = DONNConfig(
+        name="donn-mnist-3l", n=200, pixel_size=36e-6, wavelength=532e-9,
+        distance=0.28, depth=3, num_classes=10, det_size=20,
+    )
+    smoke = DONNConfig(
+        name="donn-mnist-3l-smoke", n=64, depth=3, distance=0.05, det_size=8,
+    )
+    return full, smoke
+
+
+@register("donn-mnist-5l")
+def donn5():
+    full = DONNConfig(
+        name="donn-mnist-5l", n=200, pixel_size=36e-6, wavelength=532e-9,
+        distance=0.30, depth=5, num_classes=10, det_size=20, gamma=1.12,
+        codesign="qat", device_levels=256,
+    )
+    smoke = DONNConfig(
+        name="donn-mnist-5l-smoke", n=64, depth=5, distance=0.05, det_size=8,
+        gamma=1.12, codesign="qat",
+    )
+    return full, smoke
+
+
+@register("donn-chip")
+def donn_chip():
+    full = DONNConfig(
+        name="donn-chip", n=200, pixel_size=3.45e-6, wavelength=532e-9,
+        distance=532e-6, depth=5, num_classes=10, det_size=20,
+        codesign="qat", device_levels=256,
+    )
+    smoke = DONNConfig(
+        name="donn-chip-smoke", n=64, pixel_size=3.45e-6, distance=532e-6,
+        depth=3, det_size=8, codesign="qat",
+    )
+    return full, smoke
+
+
+@register("donn-rgb")
+def donn_rgb():
+    full = DONNConfig(
+        name="donn-rgb", n=200, pixel_size=36e-6, wavelength=532e-9,
+        distance=0.30, depth=5, num_classes=6, det_size=20, channels=3,
+        gamma=1.12,
+    )
+    smoke = DONNConfig(
+        name="donn-rgb-smoke", n=64, depth=2, distance=0.05, det_size=8,
+        num_classes=6, channels=3,
+    )
+    return full, smoke
+
+
+@register("donn-seg")
+def donn_seg():
+    full = DONNConfig(
+        name="donn-seg", n=350, pixel_size=36e-6, wavelength=532e-9,
+        distance=0.30, depth=5, segmentation=True, skip_from=0,
+        layer_norm=True, gamma=1.12,
+    )
+    smoke = DONNConfig(
+        name="donn-seg-smoke", n=64, depth=3, distance=0.05,
+        segmentation=True, skip_from=0, layer_norm=True,
+    )
+    return full, smoke
+
+
+@register("donn-xl-500")
+def donn_xl():
+    full = DONNConfig(
+        name="donn-xl-500", n=500, pixel_size=36e-6, wavelength=532e-9,
+        distance=0.30, depth=30, num_classes=10, det_size=40, gamma=1.05,
+    )
+    smoke = DONNConfig(
+        name="donn-xl-500-smoke", n=96, depth=10, distance=0.05, det_size=8,
+    )
+    return full, smoke

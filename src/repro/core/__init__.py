@@ -1,0 +1,28 @@
+"""LightRidge core: the paper's contribution as composable JAX modules."""
+from repro.core.config import DONNConfig
+from repro.core.diffraction import (
+    FRAUNHOFER,
+    FRESNEL,
+    RS,
+    Grid,
+    fraunhofer,
+    intensity,
+    propagate,
+    propagate_tf,
+    transfer_function,
+)
+from repro.core.laser import Laser, data_to_cplex
+from repro.core.layers import Detector, DiffractiveLayer
+from repro.core.models import (
+    DONN,
+    MultiChannelDONN,
+    SegmentationDONN,
+    build_model,
+)
+
+__all__ = [
+    "DONNConfig", "FRAUNHOFER", "FRESNEL", "RS", "Grid", "fraunhofer",
+    "intensity", "propagate", "propagate_tf", "transfer_function",
+    "Laser", "data_to_cplex", "Detector", "DiffractiveLayer",
+    "DONN", "MultiChannelDONN", "SegmentationDONN", "build_model",
+]

@@ -1,0 +1,149 @@
+"""Hardware-software codesign algorithms (LightRidge challenge 2 / §3.3).
+
+Covers:
+- SLM / device response curves: discrete phase levels with a (possibly
+  nonlinear, non-unity) voltage->phase mapping, differentiably interpolated.
+- Gumbel-Softmax differentiable discrete phase training ([31] in the paper).
+- Quantization-aware training (straight-through rounding).
+- Post-training quantization ``weight_fab`` and hardware export helpers
+  (``to_slm`` level maps, ``to_3d_render`` thickness maps for THz masks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TWO_PI = 2.0 * math.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """A phase-modulation device (SLM pixel array or printed mask).
+
+    ``levels`` discrete states span ``phase_range``; ``response_gamma`` models
+    a nonlinear voltage->phase response curve phi(v) = range * (v/(L-1))^g —
+    g=1 is ideal, measured SLMs deviate (paper §2.2).
+    """
+
+    levels: int = 256
+    phase_range: float = TWO_PI
+    response_gamma: float = 1.0
+    name: str = "slm-lc2012"
+
+    def level_phases(self) -> np.ndarray:
+        # L states tile [0, phase_range) with spacing range/L (the top state
+        # wraps to 0 on the phase torus), matching the QAT rounding grid.
+        v = np.arange(self.levels) / self.levels
+        return (self.phase_range * v**self.response_gamma).astype(np.float32)
+
+
+def wrap_phase(phi: jax.Array, phase_range: float = TWO_PI) -> jax.Array:
+    return jnp.mod(phi, phase_range)
+
+
+def quantize_qat(phi: jax.Array, dev: DeviceSpec) -> jax.Array:
+    """Straight-through-estimator quantization-aware phase (QAT [28])."""
+    phi_w = wrap_phase(phi, dev.phase_range)
+    if dev.response_gamma == 1.0:
+        step = dev.phase_range / dev.levels
+        q = jnp.mod(jnp.round(phi_w / step), dev.levels) * step
+    else:
+        levels = jnp.asarray(dev.level_phases())
+        idx = jnp.argmin(
+            jnp.abs(phi_w[..., None] - levels[(None,) * phi_w.ndim]), axis=-1
+        )
+        q = levels[idx]
+    return phi_w + jax.lax.stop_gradient(q - phi_w)
+
+
+def quantize_gumbel(
+    phi: jax.Array,
+    dev: DeviceSpec,
+    rng: Optional[jax.Array],
+    tau: float = 1.0,
+    hard: bool = False,
+) -> jax.Array:
+    """Gumbel-Softmax differentiable discrete phase ([25, 36, 31]).
+
+    Scores are negative squared circular distances between the continuous
+    phase parameter and each device level; a Gumbel-Softmax over levels gives
+    a differentiable soft assignment (hard=True uses straight-through argmax).
+    rng=None gives the deterministic (no-noise) relaxation — used at eval.
+    """
+    levels = jnp.asarray(dev.level_phases())  # (L,)
+    phi_w = wrap_phase(phi, dev.phase_range)
+    d = phi_w[..., None] - levels  # (..., L)
+    # circular distance on the phase torus
+    d = jnp.minimum(jnp.abs(d), dev.phase_range - jnp.abs(d))
+    logits = -(d * d) / (0.1 * dev.phase_range / dev.levels + 1e-12)
+    if rng is not None:
+        g = jax.random.gumbel(rng, logits.shape, logits.dtype)
+        logits = logits + g
+    soft = jax.nn.softmax(logits / tau, axis=-1)
+    phi_soft = jnp.sum(soft * levels, axis=-1)
+    if hard:
+        idx = jnp.argmax(logits, axis=-1)
+        phi_hard = levels[idx]
+        phi_soft = phi_soft + jax.lax.stop_gradient(phi_hard - phi_soft)
+    return phi_soft
+
+
+def weight_fab(phi: jax.Array, dev: DeviceSpec) -> tuple[jax.Array, jax.Array]:
+    """Post-training quantization to fabrication levels (lr.layers.weight_fab).
+
+    Returns (level_indices int32, achieved_phase float32).
+    """
+    levels = jnp.asarray(dev.level_phases())
+    phi_w = wrap_phase(phi, dev.phase_range)
+    d = phi_w[..., None] - levels
+    d = jnp.minimum(jnp.abs(d), dev.phase_range - jnp.abs(d))
+    idx = jnp.argmin(d, axis=-1)
+    return idx.astype(jnp.int32), levels[idx]
+
+
+def to_slm(phi: jax.Array, dev: DeviceSpec) -> np.ndarray:
+    """Export phase map as device level indices (uint8/uint16 image)."""
+    idx, _ = weight_fab(phi, dev)
+    arr = np.asarray(idx)
+    return arr.astype(np.uint8 if dev.levels <= 256 else np.uint16)
+
+
+def to_3d_render(
+    phi: jax.Array, wavelength: float, delta_n: float = 0.52
+) -> np.ndarray:
+    """Phase -> printed-mask thickness map t = phi * lambda / (2 pi dn) [m].
+
+    delta_n: refractive-index contrast of the UV-curable resin (THz systems,
+    paper §2.2 / Lin et al. [34]).
+    """
+    phi_w = np.asarray(wrap_phase(phi))
+    return (phi_w * wavelength / (TWO_PI * delta_n)).astype(np.float32)
+
+
+def apply_codesign(
+    phi: jax.Array,
+    dev: Optional[DeviceSpec],
+    mode: str,
+    rng: Optional[jax.Array] = None,
+    tau: float = 1.0,
+) -> jax.Array:
+    """Dispatch used by the hardware-aware diffractive layer.
+
+    mode: "none" | "qat" | "gumbel" | "gumbel_hard" | "ptq".
+    """
+    if dev is None or mode == "none":
+        return phi
+    if mode == "qat":
+        return quantize_qat(phi, dev)
+    if mode == "gumbel":
+        return quantize_gumbel(phi, dev, rng, tau=tau, hard=False)
+    if mode == "gumbel_hard":
+        return quantize_gumbel(phi, dev, rng, tau=tau, hard=True)
+    if mode == "ptq":
+        return weight_fab(phi, dev)[1]
+    raise ValueError(f"unknown codesign mode {mode!r}")

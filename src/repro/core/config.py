@@ -1,0 +1,55 @@
+"""Configuration dataclasses for DONN systems (the paper's architectures)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class DONNConfig:
+    """Full architectural + fabrication description of a DONN system.
+
+    Mirrors the knobs exposed by the LightRidge DSL (Table 2): system size,
+    diffraction unit size, wavelength, per-gap distances, approximation
+    method, device precision, detector geometry, codesign mode.
+    """
+
+    name: str = "donn"
+    n: int = 200  # system size / resolution per side
+    pixel_size: float = 36e-6  # diffraction unit size [m]
+    wavelength: float = 532e-9  # [m]
+    distance: float = 0.30  # uniform inter-plane distance [m]
+    distances: Optional[Sequence[float]] = None  # per-gap override (depth+1 gaps)
+    depth: int = 3  # number of diffractive layers
+    approximation: str = "rs"  # rs | fresnel | fraunhofer
+    band_limit: bool = True
+    pad: bool = False  # 2x zero-padding for linear convolution
+    # --- detector ---
+    num_classes: int = 10
+    det_size: int = 20  # detector region side [pixels]
+    detector_layout: str = "grid"
+    # --- training physics ---
+    gamma: Optional[float] = None  # complex-valued regularization factor
+    # --- hardware codesign ---
+    codesign: str = "none"  # none | qat | gumbel | gumbel_hard | ptq
+    device_levels: int = 256
+    response_gamma: float = 1.0
+    # --- advanced architectures ---
+    channels: int = 1  # multi-channel (RGB) DONN
+    segmentation: bool = False
+    skip_from: Optional[int] = None  # optical-skip source layer index
+    layer_norm: bool = False  # train-time LN before detector (segmentation)
+    # --- runtime ---
+    use_pallas: bool = False  # Pallas kernels for modulation/readout
+    input_size: int = 28  # native input image side (embedded/upsampled to n)
+
+    def gap_distances(self) -> tuple:
+        """depth+1 propagation gaps: source->L1, L_i->L_{i+1}, L_last->det."""
+        if self.distances is not None:
+            ds = tuple(float(d) for d in self.distances)
+            if len(ds) != self.depth + 1:
+                raise ValueError(
+                    f"distances must have depth+1={self.depth + 1} entries"
+                )
+            return ds
+        return (float(self.distance),) * (self.depth + 1)

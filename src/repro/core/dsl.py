@@ -1,0 +1,140 @@
+"""LightRidge front-end DSL (paper §3.3, Table 2).
+
+Mirrors the paper's `lr.*` surface: ``lr.laser``, ``lr.layers.diffractlayer``
+/ ``diffractlayer_raw`` / ``detector``, ``lr.models.sequential``.  Layer specs
+are plain data; ``sequential`` assembles them into a ``DONNConfig`` + model.
+A JSON-able ``from_spec`` entry point supports config-file driven builds
+(used by the launcher).
+
+Example (5-layer hardware-aware classifier, the paper's §5.1 system):
+
+    import repro.core.dsl as lr
+    src = lr.laser(wavelength=532e-9)
+    layers = [lr.layers.diffractlayer(distance=0.3, pixel_size=36e-6,
+                                      size=200, precision=256)
+              for _ in range(5)]
+    det = lr.layers.detector(num_classes=10, det_size=20)
+    model, cfg = lr.models.sequential(layers, det, laser=src)
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Optional, Sequence
+
+from repro.core.config import DONNConfig
+from repro.core.laser import Laser
+from repro.core.models import build_model
+
+
+def laser(wavelength: float = 532e-9, profile: str = "plane",
+          waist: Optional[float] = None, power: float = 1.0) -> Laser:
+    return Laser(wavelength=wavelength, profile=profile, waist=waist, power=power)
+
+
+def _diffractlayer(distance: float = 0.3, pixel_size: float = 36e-6,
+                   size: int = 200, approximation: str = "rs",
+                   precision: Optional[int] = None, codesign: str = "qat",
+                   pad: bool = False, band_limit: bool = True) -> dict:
+    return dict(
+        kind="diffract",
+        distance=distance,
+        pixel_size=pixel_size,
+        size=size,
+        approximation=approximation,
+        precision=precision,
+        codesign=codesign if precision else "none",
+        pad=pad,
+        band_limit=band_limit,
+    )
+
+
+def _diffractlayer_raw(**kw) -> dict:
+    kw.setdefault("precision", None)
+    kw["codesign"] = "none"
+    return _diffractlayer(**kw)
+
+
+def _detector(num_classes: int = 10, det_size: int = 20, layout: str = "grid",
+              x_loc=None, y_loc=None, distance: float = 0.3) -> dict:
+    return dict(
+        kind="detector",
+        num_classes=num_classes,
+        det_size=det_size,
+        layout=layout,
+        x_loc=x_loc,
+        y_loc=y_loc,
+        distance=distance,
+    )
+
+
+def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
+                laser: Optional[Laser] = None, name: str = "donn-dsl",
+                gamma: Optional[float] = None, use_pallas: bool = False,
+                segmentation: bool = False, skip_from: Optional[int] = None,
+                channels: int = 1, input_size: int = 28):
+    """Assemble layer + detector specs into (model, DONNConfig)."""
+    if not layer_specs:
+        raise ValueError("need at least one diffractive layer")
+    first = layer_specs[0]
+    for spec in layer_specs[1:]:
+        for k in ("pixel_size", "size", "approximation", "pad", "band_limit"):
+            if spec[k] != first[k]:
+                raise ValueError(f"heterogeneous {k} across layers unsupported")
+    distances = [s["distance"] for s in layer_specs] + [detector_spec["distance"]]
+    precision = first.get("precision")
+    cfg = DONNConfig(
+        name=name,
+        n=first["size"],
+        pixel_size=first["pixel_size"],
+        wavelength=(laser.wavelength if laser else 532e-9),
+        distances=tuple(distances),
+        depth=len(layer_specs),
+        approximation=first["approximation"],
+        band_limit=first["band_limit"],
+        pad=first["pad"],
+        num_classes=detector_spec["num_classes"],
+        det_size=detector_spec["det_size"],
+        detector_layout=detector_spec["layout"],
+        gamma=gamma,
+        codesign=first["codesign"] if precision else "none",
+        device_levels=precision or 256,
+        channels=channels,
+        segmentation=segmentation,
+        skip_from=skip_from,
+        layer_norm=segmentation,
+        use_pallas=use_pallas,
+        input_size=input_size,
+    )
+    return build_model(cfg, laser), cfg
+
+
+def from_spec(spec: dict):
+    """Build a model from a JSON-able spec dict: {laser, layers, detector,...}."""
+    src = laser(**spec.get("laser", {}))
+    layer_specs = [
+        _diffractlayer(**{k: v for k, v in s.items() if k != "kind"})
+        for s in spec["layers"]
+    ]
+    det = _detector(**{k: v for k, v in spec["detector"].items() if k != "kind"})
+    opts = {
+        k: spec[k]
+        for k in (
+            "name", "gamma", "use_pallas", "segmentation", "skip_from",
+            "channels", "input_size",
+        )
+        if k in spec
+    }
+    return _sequential(layer_specs, det, laser=src, **opts)
+
+
+def from_config(cfg: DONNConfig, laser_: Optional[Laser] = None):
+    return build_model(cfg, laser_)
+
+
+layers = SimpleNamespace(
+    diffractlayer=_diffractlayer,
+    diffractlayer_raw=_diffractlayer_raw,
+    detector=_detector,
+)
+models = SimpleNamespace(sequential=_sequential)

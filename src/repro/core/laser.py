@@ -1,0 +1,93 @@
+"""Laser-source modeling (LightRidge `lr.laser`).
+
+Coherent CW sources with configurable wavelength and beam profile, plus the
+input-encoding utility ``data_to_cplex`` (paper §3.1: information is encoded
+on the amplitude, phase initialized to zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diffraction import Grid
+
+PLANE = "plane"
+GAUSSIAN = "gaussian"
+BESSEL = "bessel"
+
+
+@dataclasses.dataclass(frozen=True)
+class Laser:
+    """CW laser source: wavelength [m] + spatial beam profile."""
+
+    wavelength: float = 532e-9
+    profile: str = PLANE
+    waist: Optional[float] = None  # 1/e^2 waist for gaussian / radial scale for bessel
+    power: float = 1.0
+
+    def field(self, grid: Grid) -> np.ndarray:
+        """Complex source field on the grid (build-time constant)."""
+        c = grid.coords()
+        xx, yy = np.meshgrid(c, c, indexing="ij")
+        r2 = xx**2 + yy**2
+        if self.profile == PLANE:
+            amp = np.ones((grid.n, grid.n))
+        elif self.profile == GAUSSIAN:
+            w = self.waist if self.waist is not None else grid.extent / 4.0
+            amp = np.exp(-r2 / (w * w))
+        elif self.profile == BESSEL:
+            from numpy import sqrt
+
+            w = self.waist if self.waist is not None else grid.extent / 8.0
+            kr = sqrt(r2) / w
+            # J0 via series-free numpy special-free approximation:
+            # use np.sinc-based small-grid J0 approximation is poor; use
+            # integral definition sampled coarsely (exact enough for a source
+            # profile): J0(x) = (1/pi) int_0^pi cos(x sin t) dt
+            t = np.linspace(0.0, math.pi, 64)
+            amp = np.trapezoid(
+                np.cos(kr[..., None] * np.sin(t)), t, axis=-1
+            ) / math.pi
+        else:
+            raise ValueError(f"unknown beam profile {self.profile!r}")
+        amp = amp * math.sqrt(self.power)
+        return amp.astype(np.complex64)
+
+
+def data_to_cplex(x: jax.Array, grid_n: Optional[int] = None) -> jax.Array:
+    """Encode real-valued inputs (..., H, W) as complex fields (paper §3.1).
+
+    Amplitude = input value, phase = 0.  If ``grid_n`` is given and larger
+    than the image, the image is embedded centered into the grid (the paper
+    embeds 28x28 MNIST into the 200x200 SLM plane by upsampling; we support
+    both embed and nearest-upsample).
+    """
+    x = x.astype(jnp.float32)
+    if grid_n is not None and x.shape[-1] != grid_n:
+        x = resize_to_grid(x, grid_n)
+    return x.astype(jnp.complex64)
+
+
+def resize_to_grid(x: jax.Array, n: int, mode: str = "upsample") -> jax.Array:
+    """Nearest-neighbour upsample (or center-embed) (..., h, w) -> (..., n, n)."""
+    h, w = x.shape[-2], x.shape[-1]
+    if mode == "embed" or n < h:
+        if n < h:
+            raise ValueError("grid smaller than image")
+        out = jnp.zeros(x.shape[:-2] + (n, n), x.dtype)
+        oy, ox = (n - h) // 2, (n - w) // 2
+        return jax.lax.dynamic_update_slice(
+            out, x, (0,) * (x.ndim - 2) + (oy, ox)
+        )
+    # nearest-neighbour upsample then center-pad remainder
+    sy, sx = n // h, n // w
+    up = jnp.repeat(jnp.repeat(x, sy, axis=-2), sx, axis=-1)
+    uh, uw = up.shape[-2], up.shape[-1]
+    py, px = n - uh, n - uw
+    pads = [(0, 0)] * (x.ndim - 2) + [(py // 2, py - py // 2), (px // 2, px - px // 2)]
+    return jnp.pad(up, pads)

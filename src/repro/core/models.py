@@ -1,0 +1,246 @@
+"""DONN model containers (LightRidge `lr.models`).
+
+- ``DONN``: sequential stack of diffractive layers + detector (classification).
+- ``MultiChannelDONN``: the paper's RGB architecture (Fig. 12) — parallel
+  optical channels whose output intensities merge on one detector.
+- ``SegmentationDONN``: the paper's image-segmentation architecture (Fig. 13)
+  with *optical skip connection* (complex-field beam-splitter sum) and
+  train-time layer normalization.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codesign as cd
+from repro.core import diffraction as df
+from repro.core.config import DONNConfig
+from repro.core.laser import Laser, data_to_cplex
+from repro.core.layers import Detector, DiffractiveLayer
+from repro.nn import ParamSpec, init_params
+
+
+def _build_layers(cfg: DONNConfig, grid: df.Grid, gamma: float):
+    dev = (
+        cd.DeviceSpec(levels=cfg.device_levels, response_gamma=cfg.response_gamma)
+        if cfg.codesign != "none"
+        else None
+    )
+    gaps = cfg.gap_distances()
+    layers = []
+    for i in range(cfg.depth):
+        layers.append(
+            DiffractiveLayer(
+                grid,
+                gaps[i],
+                cfg.wavelength,
+                method=cfg.approximation,
+                band_limit=cfg.band_limit,
+                pad=cfg.pad,
+                device=dev,
+                codesign_mode=cfg.codesign,
+                gamma=gamma,
+                use_pallas=cfg.use_pallas,
+            )
+        )
+    # final free-space hop: last layer -> detector plane (no modulation)
+    final = DiffractiveLayer(
+        grid,
+        gaps[-1],
+        cfg.wavelength,
+        method=cfg.approximation,
+        band_limit=cfg.band_limit,
+        pad=cfg.pad,
+        gamma=1.0,
+        use_pallas=cfg.use_pallas,
+    )
+    return layers, final
+
+
+class DONN:
+    """Sequential DONN classifier."""
+
+    def __init__(self, cfg: DONNConfig, laser: Optional[Laser] = None):
+        if cfg.channels != 1:
+            raise ValueError("use MultiChannelDONN for channels > 1")
+        self.cfg = cfg
+        self.grid = df.Grid(cfg.n, cfg.pixel_size)
+        self.laser = laser or Laser(wavelength=cfg.wavelength)
+        self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
+        self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self.detector = Detector(
+            self.grid,
+            cfg.num_classes,
+            cfg.det_size,
+            cfg.detector_layout,
+            use_pallas=cfg.use_pallas,
+        )
+        self.source = self.laser.field(self.grid)  # (n, n) complex64 const
+
+    # --- params ---
+    def param_specs(self):
+        return {
+            "phase": {
+                f"layer_{i}": layer.param_spec()
+                for i, layer in enumerate(self.layers)
+            }
+        }
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_specs(), key)
+
+    # --- forward ---
+    def encode(self, x: jax.Array) -> jax.Array:
+        u = data_to_cplex(x, self.cfg.n)
+        return u * jnp.asarray(self.source)
+
+    def fields(self, params, x, rng: Optional[jax.Array] = None):
+        """All intermediate fields (lr.model.prop_view)."""
+        u = self.encode(x)
+        out = [u]
+        rngs = (
+            jax.random.split(rng, len(self.layers)) if rng is not None else
+            [None] * len(self.layers)
+        )
+        for i, layer in enumerate(self.layers):
+            u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
+            out.append(u)
+        u = self.final.propagate(u)
+        out.append(u)
+        return out
+
+    def apply(self, params, x, rng: Optional[jax.Array] = None) -> jax.Array:
+        """Images (..., h, w) -> per-class detector intensities (..., C)."""
+        u = self.fields(params, x, rng)[-1]
+        return self.detector(u)
+
+    def prop_view(self, params, x, rng=None):
+        return [df.intensity(u) for u in self.fields(params, x, rng)]
+
+
+class MultiChannelDONN:
+    """Multi-channel (RGB) DONN (paper Fig. 12).
+
+    ``channels`` parallel optical stacks; each encodes one input channel; all
+    output beams project onto a single shared detector where intensities add.
+    """
+
+    def __init__(self, cfg: DONNConfig, laser: Optional[Laser] = None):
+        self.cfg = cfg
+        sub = DONNConfig(**{**cfg.__dict__, "channels": 1})
+        self.channel_model = DONN(sub, laser)
+
+    def param_specs(self):
+        spec = self.channel_model.param_specs()["phase"]
+        c = self.cfg.channels
+        return {
+            "phase": {
+                name: ParamSpec(
+                    (c,) + s.shape,
+                    s.dtype,
+                    ("channel",) + s.logical_axes,
+                    init=s.init,
+                )
+                for name, s in spec.items()
+            }
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def apply(self, params, x, rng: Optional[jax.Array] = None) -> jax.Array:
+        """x: (..., C, h, w) multi-channel images -> (..., num_classes)."""
+        cm = self.channel_model
+
+        def one_channel(phases, xc):
+            p = {"phase": phases}
+            u = cm.fields(p, xc, rng)[-1]
+            return df.intensity(u)
+
+        # vmap over the channel axis of both params and inputs
+        inten = jax.vmap(one_channel, in_axes=(0, -3), out_axes=0)(
+            params["phase"], x
+        )
+        total = jnp.sum(inten, axis=0)  # incoherent sum on shared detector
+        masks = jnp.asarray(cm.detector.masks)
+        return jnp.einsum("...hw,chw->...c", total, masks)
+
+
+class SegmentationDONN:
+    """All-optical image segmentation DONN (paper Fig. 13a).
+
+    Optical skip connection: the field exiting layer ``skip_from`` is split
+    off, propagated directly to the detector plane, and coherently recombined
+    (beam-splitter sum, 1/sqrt(2) each) with the main path.  LayerNorm on the
+    output intensity is applied only during training.
+    """
+
+    def __init__(self, cfg: DONNConfig, laser: Optional[Laser] = None):
+        self.cfg = cfg
+        self.grid = df.Grid(cfg.n, cfg.pixel_size)
+        self.laser = laser or Laser(wavelength=cfg.wavelength)
+        self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
+        self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self.skip_from = cfg.skip_from
+        if self.skip_from is not None:
+            # skip hop covers the remaining distance to the detector plane
+            gaps = cfg.gap_distances()
+            z_skip = float(sum(gaps[self.skip_from + 1 :]))
+            self.skip_hop = DiffractiveLayer(
+                self.grid,
+                z_skip,
+                cfg.wavelength,
+                method=cfg.approximation,
+                band_limit=cfg.band_limit,
+                pad=cfg.pad,
+            )
+        self.source = self.laser.field(self.grid)
+
+    def param_specs(self):
+        return {
+            "phase": {
+                f"layer_{i}": layer.param_spec()
+                for i, layer in enumerate(self.layers)
+            }
+        }
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def apply(
+        self, params, x, rng: Optional[jax.Array] = None, train: bool = False
+    ) -> jax.Array:
+        """Images (..., h, w) -> per-pixel intensity map (..., n, n)."""
+        u = data_to_cplex(x, self.cfg.n) * jnp.asarray(self.source)
+        skip_u = None
+        rngs = (
+            jax.random.split(rng, len(self.layers)) if rng is not None else
+            [None] * len(self.layers)
+        )
+        for i, layer in enumerate(self.layers):
+            u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
+            if self.skip_from is not None and i == self.skip_from:
+                skip_u = u
+        u = self.final.propagate(u)
+        if skip_u is not None:
+            u = (u + self.skip_hop.propagate(skip_u)) / jnp.sqrt(2.0).astype(
+                jnp.complex64
+            )
+        inten = df.intensity(u)
+        if train and self.cfg.layer_norm:
+            mean = jnp.mean(inten, axis=(-2, -1), keepdims=True)
+            var = jnp.var(inten, axis=(-2, -1), keepdims=True)
+            inten = (inten - mean) * jax.lax.rsqrt(var + 1e-6)
+        return inten
+
+
+def build_model(cfg: DONNConfig, laser: Optional[Laser] = None):
+    """Factory used by the DSL and configs."""
+    if cfg.segmentation:
+        return SegmentationDONN(cfg, laser)
+    if cfg.channels > 1:
+        return MultiChannelDONN(cfg, laser)
+    return DONN(cfg, laser)

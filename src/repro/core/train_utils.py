@@ -1,0 +1,131 @@
+"""DONN training utilities (LightRidge `lr.train.utils`).
+
+Loss per the paper (§2.1): L = || softmax(I) - onehot(t) ||_2^2 over the
+per-class detector intensities I.  Also: accuracy, detector-noise injection
+(Fig. 7 confidence study), and a jit'd training loop used by the examples and
+benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW
+
+
+def mse_softmax_loss(logits: jax.Array, labels: jax.Array, num_classes: int):
+    """Paper loss: MSE between softmax(detector intensities) and one-hot."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=probs.dtype)
+    return jnp.mean(jnp.sum((probs - onehot) ** 2, axis=-1))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def add_detector_noise(
+    logits_or_intensity: jax.Array, rng: jax.Array, frac: float
+) -> jax.Array:
+    """Uniform intensity noise bounded by ``frac`` of the max (Fig. 7)."""
+    scale = frac * jnp.max(logits_or_intensity, axis=-1, keepdims=True)
+    noise = jax.random.uniform(
+        rng, logits_or_intensity.shape, logits_or_intensity.dtype, 0.0, 1.0
+    )
+    return logits_or_intensity + scale * noise
+
+
+def bce_segmentation_loss(intensity: jax.Array, mask: jax.Array):
+    """Per-pixel BCE on normalized intensity (segmentation DONN)."""
+    logits = intensity  # already layer-normed in train mode
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * mask + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def iou(intensity: jax.Array, mask: jax.Array, thresh: float = 0.0):
+    pred = (intensity > thresh).astype(jnp.float32)
+    inter = jnp.sum(pred * mask, axis=(-2, -1))
+    union = jnp.sum(jnp.maximum(pred, mask), axis=(-2, -1))
+    return jnp.mean(inter / jnp.maximum(union, 1.0))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    losses: list
+    accs: list
+    wall_time_s: float
+
+
+def make_train_step(model, optimizer, num_classes: int, needs_rng: bool = False):
+    """jit'd (params, opt_state, step, batch[, rng]) -> (params, opt, loss, acc)."""
+
+    def loss_fn(params, xb, yb, rng):
+        logits = model.apply(params, xb, rng) if needs_rng else model.apply(
+            params, xb
+        )
+        return mse_softmax_loss(logits, yb, num_classes), logits
+
+    @jax.jit
+    def step_fn(params, opt_state, step, xb, yb, rng):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, xb, yb, rng
+        )
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, loss, accuracy(logits, yb)
+
+    return step_fn
+
+
+def train_classifier(
+    model,
+    params,
+    data_iter,
+    steps: int,
+    lr: float = 0.1,
+    num_classes: int = 10,
+    needs_rng: bool = False,
+    rng: Optional[jax.Array] = None,
+    log_every: int = 0,
+) -> TrainResult:
+    """Compact Adam training loop for DONN classifiers (paper uses Adam+MSE)."""
+    optimizer = AdamW(lr=lr)
+    opt_state = optimizer.init(params)
+    step_fn = make_train_step(model, optimizer, num_classes, needs_rng)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    losses, accs = [], []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        xb, yb = next(data_iter)
+        rng, sub = jax.random.split(rng)
+        params, opt_state, loss, acc = step_fn(
+            params, opt_state, jnp.asarray(i), xb, yb, sub
+        )
+        losses.append(float(loss))
+        accs.append(float(acc))
+        if log_every and (i % log_every == 0):
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  acc {accs[-1]:.3f}")
+    return TrainResult(params, losses, accs, time.perf_counter() - t0)
+
+
+def evaluate_classifier(model, params, data_iter, batches: int,
+                        rng: Optional[jax.Array] = None,
+                        noise_frac: float = 0.0) -> float:
+    apply = jax.jit(lambda p, x: model.apply(p, x))
+    correct, total = 0.0, 0
+    rng = rng if rng is not None else jax.random.PRNGKey(1)
+    for _ in range(batches):
+        xb, yb = next(data_iter)
+        logits = apply(params, xb)
+        if noise_frac > 0.0:
+            rng, sub = jax.random.split(rng)
+            logits = add_detector_noise(logits, sub, noise_frac)
+        correct += float(jnp.sum(jnp.argmax(logits, -1) == yb))
+        total += int(yb.shape[0])
+    return correct / max(total, 1)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    batch_iterator,
+    synth_digits,
+    synth_rgb_scenes,
+    synth_seg,
+)
+
+__all__ = ["batch_iterator", "synth_digits", "synth_rgb_scenes", "synth_seg"]

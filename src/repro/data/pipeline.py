@@ -1,0 +1,92 @@
+"""Data pipeline runtime: background prefetch + straggler/step-time monitor.
+
+- ``Prefetcher``: a worker thread keeps a bounded queue of ready batches
+  (host->device overlap); backpressure via queue bound.
+- ``StepMonitor``: EMA step-time tracker that flags straggling steps/hosts
+  (z-score over a rolling window) — the hook a pod-level controller uses
+  for straggler mitigation (re-shard or evict) at scale.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    def __init__(self, it: Iterator, depth: int = 2,
+                 transform: Optional[Callable] = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._transform = transform
+        self._done = object()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        try:
+            for item in self._it:
+                if self._transform is not None:
+                    item = self._transform(item)
+                self._q.put(item)
+        except BaseException as e:  # noqa: BLE001
+            self._err = e
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+class StepMonitor:
+    """EMA + rolling z-score step-time tracker with straggler flags."""
+
+    def __init__(self, alpha: float = 0.1, window: int = 50,
+                 z_thresh: float = 3.0):
+        self.alpha = alpha
+        self.z_thresh = z_thresh
+        self.ema: Optional[float] = None
+        self.history: collections.deque = collections.deque(maxlen=window)
+        self.stragglers: list = []
+        self._t0: Optional[float] = None
+        self.steps = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: Optional[int] = None) -> float:
+        dt = time.perf_counter() - self._t0
+        self.record(dt, step)
+        return dt
+
+    def record(self, dt: float, step: Optional[int] = None):
+        self.steps += 1
+        if self.ema is None:
+            self.ema = dt
+        if len(self.history) >= 5:
+            mu = sum(self.history) / len(self.history)
+            var = sum((x - mu) ** 2 for x in self.history) / len(self.history)
+            sd = math.sqrt(max(var, 1e-12))
+            if dt > mu + self.z_thresh * sd:
+                self.stragglers.append(
+                    {"step": step if step is not None else self.steps,
+                     "dt": dt, "mean": mu, "z": (dt - mu) / sd}
+                )
+        self.history.append(dt)
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+
+    @property
+    def straggler_fraction(self) -> float:
+        return len(self.stragglers) / max(self.steps, 1)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots (Fig. 9):
+complex multiply / phase modulation / detector readout, plus the shared
+complex-rotation kernel reused for RoPE in the LM stack (DESIGN.md §3).
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+off-TPU the kernels run in interpret mode so they are validated everywhere.
+"""
+from repro.kernels import ops
+
+__all__ = ["ops"]

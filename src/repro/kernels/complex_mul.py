@@ -1,0 +1,77 @@
+"""Pallas TPU kernels for the paper's ComplexMM hot spot (Fig. 9).
+
+TPU Pallas has no native complex arithmetic, so wavefields are carried as
+separate real/imaginary planes (struct-of-arrays); the kernels fuse the four
+real multiplies + two adds of a complex multiply (and, for ``phase_apply``,
+the cos/sin transcendentals) into one VMEM-resident pass instead of the
+6+ separate HLO ops XLA would otherwise materialize between FFTs.
+
+Block layout: fields are (..., H, W); W is tiled to the 128-lane dimension,
+H to the 8-sublane dimension.  The ops.py wrappers zero-pad to block
+multiples (zero is the identity for every kernel here) and slice back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --------------------------------------------------------- complex multiply
+def _complex_mul_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[0], bi_ref[0]  # b block has no batch dim content
+    or_ref[...] = ar * br - ai * bi
+    oi_ref[...] = ar * bi + ai * br
+
+
+def complex_mul_pallas(ar, ai, br, bi, *, bh: int, bw: int, interpret: bool):
+    """a: (B, H, W) split planes; b: (H, W) split planes (broadcast over B)."""
+    B, H, W = ar.shape
+    grid = (B, H // bh, W // bw)
+    a_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
+    b_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (0, i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct(ar.shape, ar.dtype),
+        jax.ShapeDtypeStruct(ar.shape, ar.dtype),
+    ]
+    return pl.pallas_call(
+        _complex_mul_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[a_spec, a_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ar, ai, br[None], bi[None])
+
+
+# ----------------------------------------------------------- phase modulate
+def _phase_apply_kernel(ur_ref, ui_ref, phi_ref, or_ref, oi_ref, *, gamma):
+    ur, ui = ur_ref[...], ui_ref[...]
+    phi = phi_ref[0]
+    c = jnp.cos(phi) * gamma
+    s = jnp.sin(phi) * gamma
+    or_ref[...] = ur * c - ui * s
+    oi_ref[...] = ur * s + ui * c
+
+
+def phase_apply_pallas(ur, ui, phi, gamma, *, bh: int, bw: int, interpret: bool):
+    """u: (B, H, W) split planes, phi: (H, W) -> gamma * u * exp(j phi)."""
+    B, H, W = ur.shape
+    grid = (B, H // bh, W // bw)
+    u_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
+    p_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (0, i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct(ur.shape, ur.dtype),
+        jax.ShapeDtypeStruct(ur.shape, ur.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_phase_apply_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[u_spec, u_spec, p_spec],
+        out_specs=[u_spec, u_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ur, ui, phi[None])

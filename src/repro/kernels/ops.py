@@ -1,0 +1,278 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: zero-padding to block multiples (zero is the identity element for
+every kernel here), block-size selection (128-lane / 8-sublane alignment),
+broadcasting, and backend dispatch (interpret=True off-TPU so the kernels
+are exercised everywhere; compiled Mosaic path on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import complex_mul as _cm
+from repro.kernels import intensity_readout as _ir
+from repro.kernels import rope as _rp
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_blocks(H: int, W: int, max_h: int = 64, max_w: int = 512):
+    bw = min(_ceil_to(W, 128), max_w)
+    bh = min(_ceil_to(H, 8), max_h)
+    return bh, bw
+
+
+def _pad2d(x, Hp, Wp):
+    H, W = x.shape[-2], x.shape[-1]
+    if H == Hp and W == Wp:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, Hp - H), (0, Wp - W)])
+
+
+# --------------------------------------------------------------------------
+# complex_mul: (B?, H, W) x (H, W) split-plane complex multiply.
+# custom VJP: da = g * conj(b); db = sum_batch g * conj(a).
+# --------------------------------------------------------------------------
+def _complex_mul_raw(ar, ai, br, bi):
+    B, H, W = ar.shape
+    bh, bw = _pick_blocks(H, W)
+    Hp, Wp = _ceil_to(H, bh), _ceil_to(W, bw)
+    out_r, out_i = _cm.complex_mul_pallas(
+        _pad2d(ar, Hp, Wp), _pad2d(ai, Hp, Wp),
+        _pad2d(br, Hp, Wp), _pad2d(bi, Hp, Wp),
+        bh=bh, bw=bw, interpret=_interpret(),
+    )
+    return out_r[..., :H, :W], out_i[..., :H, :W]
+
+
+@jax.custom_vjp
+def _complex_mul(ar, ai, br, bi):
+    return _complex_mul_raw(ar, ai, br, bi)
+
+
+def _complex_mul_fwd(ar, ai, br, bi):
+    return _complex_mul_raw(ar, ai, br, bi), (ar, ai, br, bi)
+
+
+def _complex_mul_bwd(res, g):
+    ar, ai, br, bi = res
+    gr, gi = g
+    # d a = g * conj(b);  d b = sum_B g * conj(a)
+    dar, dai = _complex_mul_raw(gr, gi, br, -bi)
+    dbr = jnp.sum(gr * ar + gi * ai, axis=0)
+    dbi = jnp.sum(gi * ar - gr * ai, axis=0)
+    return dar, dai, dbr, dbi
+
+
+_complex_mul.defvjp(_complex_mul_fwd, _complex_mul_bwd)
+
+
+@jax.jit
+def complex_mul(ar, ai, br, bi):
+    """(B?, H, W) x (H, W) split-plane complex multiply via Pallas."""
+    squeeze = ar.ndim == 2
+    if squeeze:
+        ar, ai = ar[None], ai[None]
+    out_r, out_i = _complex_mul(ar, ai, br, bi)
+    if squeeze:
+        out_r, out_i = out_r[0], out_i[0]
+    return out_r, out_i
+
+
+# --------------------------------------------------------------------------
+# phase_apply: gamma * u * exp(j phi).  VJP:
+#   d u   = g * conj(gamma e^{j phi}) = rotation of g by -phi times gamma
+#   d phi = sum_B ( gi * out_r - gr * out_i )   [since d out/d phi = j out]
+# --------------------------------------------------------------------------
+def _phase_apply_raw(ur, ui, phi, gamma):
+    B, H, W = ur.shape
+    bh, bw = _pick_blocks(H, W)
+    Hp, Wp = _ceil_to(H, bh), _ceil_to(W, bw)
+    out_r, out_i = _cm.phase_apply_pallas(
+        _pad2d(ur, Hp, Wp), _pad2d(ui, Hp, Wp), _pad2d(phi, Hp, Wp),
+        float(gamma), bh=bh, bw=bw, interpret=_interpret(),
+    )
+    return out_r[..., :H, :W], out_i[..., :H, :W]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _phase_apply(ur, ui, phi, gamma):
+    return _phase_apply_raw(ur, ui, phi, gamma)
+
+
+def _phase_apply_fwd(ur, ui, phi, gamma):
+    out = _phase_apply_raw(ur, ui, phi, gamma)
+    return out, (phi, out)
+
+
+def _phase_apply_bwd(gamma, res, g):
+    phi, (our, oui) = res
+    gr, gi = g
+    dur, dui = _phase_apply_raw(gr, gi, -phi, gamma)
+    dphi = jnp.sum(gi * our - gr * oui, axis=0)
+    return dur, dui, dphi
+
+
+_phase_apply.defvjp(_phase_apply_fwd, _phase_apply_bwd)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def phase_apply(ur, ui, phi, gamma: float = 1.0):
+    """gamma * u * exp(j phi) on split planes (paper Eq. 9 hot spot)."""
+    squeeze = ur.ndim == 2
+    if squeeze:
+        ur, ui = ur[None], ui[None]
+    lead = ur.shape[:-2]
+    H, W = ur.shape[-2:]
+    out_r, out_i = _phase_apply(
+        ur.reshape((-1, H, W)), ui.reshape((-1, H, W)), phi, float(gamma)
+    )
+    out_r = out_r.reshape(lead + (H, W))
+    out_i = out_i.reshape(lead + (H, W))
+    if squeeze:
+        out_r, out_i = out_r[0], out_i[0]
+    return out_r, out_i
+
+
+# --------------------------------------------------------------------------
+# intensity_readout: out[b,c] = sum_hw masks[c] * (ur^2 + ui^2).
+# VJP (masks are non-trainable detector geometry):
+#   d ur = 2 ur * (g @ masks),  d ui = 2 ui * (g @ masks)
+# --------------------------------------------------------------------------
+def _readout_raw(ur, ui, masks):
+    B, H, W = ur.shape
+    bh, bw = _pick_blocks(H, W, max_h=32, max_w=256)
+    Hp, Wp = _ceil_to(H, bh), _ceil_to(W, bw)
+    return _ir.intensity_readout_pallas(
+        _pad2d(ur, Hp, Wp), _pad2d(ui, Hp, Wp),
+        _pad2d(masks.astype(ur.dtype), Hp, Wp),
+        bh=bh, bw=bw, interpret=_interpret(),
+    )
+
+
+@jax.custom_vjp
+def _readout(ur, ui, masks):
+    return _readout_raw(ur, ui, masks)
+
+
+def _readout_fwd(ur, ui, masks):
+    return _readout_raw(ur, ui, masks), (ur, ui, masks)
+
+
+def _readout_bwd(res, g):
+    ur, ui, masks = res
+    w = jnp.einsum("bc,chw->bhw", g, masks)
+    return 2.0 * ur * w, 2.0 * ui * w, jnp.zeros_like(masks)
+
+
+_readout.defvjp(_readout_fwd, _readout_bwd)
+
+
+@jax.jit
+def intensity_readout(ur, ui, masks):
+    """(B?, H, W) field planes + (C, H, W) masks -> (B?, C) intensities."""
+    squeeze = ur.ndim == 2
+    if squeeze:
+        ur, ui = ur[None], ui[None]
+    lead = ur.shape[:-2]
+    H, W = ur.shape[-2:]
+    out = _readout(ur.reshape((-1, H, W)), ui.reshape((-1, H, W)), masks)
+    out = out.reshape(lead + (masks.shape[0],))
+    if squeeze:
+        out = out[0]
+    return out
+
+
+# --------------------------------------------------------------------------
+# apply_rope: unitary rotation; VJP rotates cotangent by -theta.
+# --------------------------------------------------------------------------
+def _rope_raw(x3, cos, sin):
+    BN, S, D = x3.shape
+    bs = min(_ceil_to(S, 8), 256)
+    Sp = _ceil_to(S, bs)
+    if Sp != S:
+        x3 = jnp.pad(x3, [(0, 0), (0, Sp - S), (0, 0)])
+        cos = jnp.pad(cos, [(0, Sp - S), (0, 0)])
+        sin = jnp.pad(sin, [(0, Sp - S), (0, 0)])
+    out = _rp.rope_pallas(x3, cos, sin, bs=bs, interpret=_interpret())
+    return out[:, :S, :]
+
+
+@jax.custom_vjp
+def _rope(x3, cos, sin):
+    return _rope_raw(x3, cos, sin)
+
+
+def _rope_fwd(x3, cos, sin):
+    return _rope_raw(x3, cos, sin), (cos, sin)
+
+
+def _rope_bwd(res, g):
+    cos, sin = res
+    return _rope_raw(g, cos, -sin), jnp.zeros_like(cos), jnp.zeros_like(sin)
+
+
+_rope.defvjp(_rope_fwd, _rope_bwd)
+
+
+@jax.jit
+def apply_rope(x, cos, sin):
+    """x: (..., S, D) rotate-half RoPE with cos/sin (S, D//2)."""
+    lead = x.shape[:-2]
+    S, D = x.shape[-2:]
+    out = _rope(x.reshape((-1, S, D)), cos, sin)
+    return out.reshape(lead + (S, D))
+
+
+# re-export oracles for tests/benchmarks
+complex_mul_ref = ref.complex_mul_ref
+phase_apply_ref = ref.phase_apply_ref
+intensity_readout_ref = ref.intensity_readout_ref
+rope_ref = ref.rope_ref
+
+
+# --------------------------------------------------------------------------
+# selective_scan: mamba-1 SSM forward (inference path; no custom VJP —
+# training uses the chunked jnp scan in repro.models.ssm).
+# --------------------------------------------------------------------------
+@jax.jit
+def selective_scan(dt, x, bs, cs, a):
+    """dt/x (B, S, D); bs/cs (B, S, N); a (D, N) -> y (B, S, D) float32."""
+    from repro.kernels import selective_scan as _ss
+
+    B, S, D = x.shape
+    bd = min(_ceil_to(D, 128), 512)
+    Dp = _ceil_to(D, bd)
+    if Dp != D:
+        pad = [(0, 0), (0, 0), (0, Dp - D)]
+        dt = jnp.pad(dt, pad)
+        x = jnp.pad(x, pad)
+        a = jnp.pad(a, [(0, Dp - D), (0, 0)])
+    y = _ss.selective_scan_pallas(
+        dt.astype(jnp.float32), x.astype(jnp.float32),
+        bs.astype(jnp.float32), cs.astype(jnp.float32),
+        a.astype(jnp.float32), bd=bd, interpret=_interpret(),
+    )
+    return y[..., :D]
+
+
+def selective_scan_ref(dt, x, bs, cs, a):
+    """Pure-jnp oracle (wraps the model's chunked scan, zero init)."""
+    from repro.models.ssm import _selective_scan
+
+    B, S, D = x.shape
+    h0 = jnp.zeros((B, D, a.shape[-1]), jnp.float32)
+    y, _ = _selective_scan(dt.astype(jnp.float32), bs.astype(jnp.float32),
+                           cs.astype(jnp.float32), x.astype(jnp.float32),
+                           a.astype(jnp.float32), h0, chunk=64)
+    return y

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def complex_mul_ref(ar, ai, br, bi):
+    """(a_r + j a_i) * (b_r + j b_i), split-plane complex multiply.
+
+    b broadcasts against a (e.g. a: (B, H, W), b: (H, W)).
+    """
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def phase_apply_ref(ur, ui, phi, gamma=1.0):
+    """gamma * u * exp(j phi): the paper's phase-modulation hot spot (Eq. 9)."""
+    c = jnp.cos(phi) * gamma
+    s = jnp.sin(phi) * gamma
+    return ur * c - ui * s, ur * s + ui * c
+
+
+def intensity_readout_ref(ur, ui, masks):
+    """|u|^2 pooled per detector region: (B,H,W)x(C,H,W) -> (B,C)."""
+    inten = ur * ur + ui * ui
+    return jnp.einsum("bhw,chw->bc", inten, masks)
+
+
+def rope_ref(x, cos, sin):
+    """Rotate-half RoPE: x (B, S, D), cos/sin (S, D//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: mamba-1 selective-scan forward (inference path).
+
+The SSM recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t ;   y_t = C_t . h_t
+
+is sequential in t but elementwise in d_inner, so the kernel blocks
+d_inner across the grid (each block carries its private h in VMEM through
+a fori_loop over time) — the (B, S, d, state) discretization tensors are
+never materialized in HBM, which is what makes the pure-jnp path
+memory-bound (EXPERIMENTS.md §Roofline / ssm note).
+
+Scope: forward only (prefill/serving).  Training keeps the chunked-scan
+jnp path (`repro.models.ssm`), whose backward is handled by jax.checkpoint;
+a fused backward kernel is the natural next step.  Validated against
+`repro.models.ssm._selective_scan` in tests/test_selective_scan_kernel.py.
+
+Layout: dt/x (B, S, D), Bs/Cs (B, S, N), A (D, N); D is tiled to the
+128-lane dim, state N (16) lives on the sublane dim of the carried h.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(dt_ref, x_ref, bs_ref, cs_ref, a_ref, y_ref, *, seq_len):
+    # blocks: dt/x (1, S, bd); bs/cs (1, S, N); a (bd, N); y (1, S, bd)
+    a = a_ref[...]  # (bd, N)
+    bd, n = a.shape
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :]  # (bd,)
+        x_t = x_ref[0, t, :]
+        b_t = bs_ref[0, t, :]  # (N,)
+        c_t = cs_ref[0, t, :]
+        da = jnp.exp(dt_t[:, None] * a)  # (bd, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1)
+        return h
+
+    jax.lax.fori_loop(0, seq_len, step, jnp.zeros((bd, n), jnp.float32))
+
+
+def selective_scan_pallas(dt, x, bs, cs, a, *, bd: int, interpret: bool):
+    """dt/x: (B, S, D) f32; bs/cs: (B, S, N) f32; a: (D, N) f32 -> y (B,S,D)."""
+    B, S, D = x.shape
+    N = bs.shape[-1]
+    grid = (B, D // bd)
+    dx_spec = pl.BlockSpec((1, S, bd), lambda b, j: (b, 0, j))
+    bc_spec = pl.BlockSpec((1, S, N), lambda b, j: (b, 0, 0))
+    a_spec = pl.BlockSpec((bd, N), lambda b, j: (j, 0))
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, seq_len=S),
+        grid=grid,
+        in_specs=[dx_spec, dx_spec, bc_spec, bc_spec, a_spec],
+        out_specs=dx_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+        interpret=interpret,
+    )(dt, x, bs, cs, a)

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (same rule as dryrun.py).
+
+"""§Perf hillclimb driver: named experiment variants for the three chosen
+cells, each re-lowered and re-analysed like a dry-run cell.
+
+  python -m repro.launch.perf --cell glm4 [--variant NAME] [--out DIR]
+
+Cells (chosen per the §Perf brief):
+  donn   — donn-xl-500/train_b256: most representative of the paper's
+           technique; baseline is catastrophically collective-bound
+           (GSPMD all-gathers the global field for every FFT).
+  glm4   — glm4-9b/train_4k: representative dense-LM train, memory-bound.
+  arctic — arctic-480b/train_4k: worst roofline fraction + most
+           collective-bound train cell.
+"""
+import argparse
+import dataclasses
+import json
+import math
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import mesh as mesh_mod
+from repro.launch.dryrun import OVERRIDES, donn_model_flops, lm_model_flops
+from repro.launch.specs import input_specs
+from repro.models import lm
+from repro.models.config import get_config
+from repro.runtime import sharding as shd
+from repro.runtime import steps as steps_mod
+from repro.runtime.donn_steps import (
+    compile_donn_train_step, compile_donn_train_step_shardmap,
+)
+from repro.runtime.hlo_analysis import analyze
+
+# variant := (name, cfg_patch, step_kwargs, use_shardmap)
+VARIANTS = {
+    "donn": {
+        "arch": "donn-xl-500", "shape": "train_b256",
+        "variants": [
+            ("baseline_pjit", {}, {}, False),
+            ("shardmap_dp", {}, {}, True),
+        ],
+    },
+    "glm4": {
+        "arch": "glm4-9b", "shape": "train_4k",
+        "variants": [
+            ("baseline", {}, {}, False),
+            ("bf16_gather", {}, {"cast_params_to": jnp.bfloat16}, False),
+            ("bf16_gather_chunk2048", {"attn_chunk": 2048},
+             {"cast_params_to": jnp.bfloat16}, False),
+            ("bf16_gather_chunk4096", {"attn_chunk": 4096},
+             {"cast_params_to": jnp.bfloat16}, False),
+            ("bf16_gather_accum2", {},
+             {"cast_params_to": jnp.bfloat16, "accum_steps": 2}, False),
+            ("bf16_gather_chunk2048_pbf16",
+             {"attn_chunk": 2048, "attn_p_bf16": True},
+             {"cast_params_to": jnp.bfloat16}, False),
+            ("pbf16_only", {"attn_p_bf16": True}, {}, False),
+        ],
+    },
+    "arctic": {
+        "arch": "arctic-480b", "shape": "train_4k",
+        "variants": [
+            ("baseline_overrides", {}, {}, False),
+            ("cap1.0", {"capacity_factor": 1.0}, {}, False),
+            ("cap1.0_group2048",
+             {"capacity_factor": 1.0, "moe_group": 2048}, {}, False),
+            ("cap1.0_accum16", {"capacity_factor": 1.0},
+             {"accum_steps": 16}, False),
+        ],
+    },
+}
+
+
+def run_variant(cell_key: str, name, cfg_patch, step_kwargs, use_shardmap,
+                multi_pod=False):
+    spec = VARIANTS[cell_key]
+    arch, shape = spec["arch"], spec["shape"]
+    t0 = time.time()
+    cfg, cell, kind, specs = input_specs(arch, shape)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    is_donn = not hasattr(cfg, "family")
+
+    with mesh:
+        if is_donn:
+            compile_fn = (compile_donn_train_step_shardmap if use_shardmap
+                          else compile_donn_train_step)
+            fn, s_shard, b_shard, sspecs = compile_fn(
+                cfg, mesh, global_batch=cell.global_batch
+            )
+            lowered = fn.lower(shd.abstract_like(sspecs), specs)
+        else:
+            over = dict(OVERRIDES.get((arch, shape, multi_pod), {}))
+            over.update(step_kwargs)
+            fn, s_shard, b_shard, sspecs = steps_mod.compile_train_step(
+                cfg, mesh, specs, **over
+            )
+            lowered = fn.lower(shd.abstract_like(sspecs), specs)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    hlo = analyze(compiled.as_text())
+    if is_donn:
+        _, _, model_flops = donn_model_flops(cfg, cell.global_batch)
+    else:
+        _, _, model_flops = lm_model_flops(cfg, kind, cell)
+    terms = {
+        "compute_s": hlo.flops / mesh_mod.PEAK_FLOPS_BF16,
+        "memory_s": hlo.bytes / mesh_mod.HBM_BW,
+        "collective_s": hlo.collective_bytes / mesh_mod.ICI_BW,
+    }
+    bound = max(terms.values())
+    per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+               + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "cell": f"{arch}/{shape}", "variant": name,
+        "mesh": "pod2-512" if multi_pod else "pod1-256",
+        "terms": terms, "dominant": max(terms, key=terms.get),
+        "bound_s": bound,
+        "roofline_fraction": (model_flops / chips / mesh_mod.PEAK_FLOPS_BF16)
+        / bound if bound > 0 else 0.0,
+        "collective_breakdown": hlo.collective_breakdown,
+        "memory_per_dev_GB": per_dev / 1e9,
+        "fits_16GiB": bool(per_dev <= 16e9),
+        "compile_wall_s": time.time() - t0,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(VARIANTS) + ["all"], default="all")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = list(VARIANTS) if args.cell == "all" else [args.cell]
+    for ck in cells:
+        for v in VARIANTS[ck]["variants"]:
+            name, cfg_patch, step_kwargs, use_sm = v[:4]
+            if args.variant and name != args.variant:
+                continue
+            tag = f"{ck}__{name}__{'pod2' if args.multi_pod else 'pod1'}"
+            path = out / f"{tag}.json"
+            if path.exists():
+                print(f"[skip-cached] {tag}")
+                continue
+            print(f"[perf] {tag} ...", flush=True)
+            try:
+                rec = run_variant(ck, name, cfg_patch, step_kwargs, use_sm,
+                                  args.multi_pod)
+            except Exception as e:  # noqa: BLE001
+                rec = {"cell": ck, "variant": name,
+                       "status": f"FAIL: {type(e).__name__}: {e}"}
+            path.write_text(json.dumps(rec, indent=2, default=float))
+            t = rec.get("terms")
+            print(f"[done] {tag}: "
+                  + (f"bound={rec['bound_s']:.3f}s dom={rec['dominant']} "
+                     f"frac={rec['roofline_fraction']:.4f} "
+                     f"mem={rec['memory_per_dev_GB']:.1f}GB"
+                     if t else rec.get("status", "")), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: everything here is abstract.  Frontend stubs per the
+assignment: vlm cells get precomputed patch embeddings, audio cells get
+EnCodec token ids (which are just int tokens — the backbone is token-in).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DONNConfig
+from repro.models import lm
+from repro.models.config import LM_SHAPES, LMConfig, ShapeCell, get_config
+from repro.runtime import sharding as shd
+
+# DONN cells use their own shape list (training emulation workloads).
+DONN_SHAPES = (
+    ShapeCell("train_b1024", 0, 1024, "train"),
+    ShapeCell("train_b256", 0, 256, "train"),
+)
+
+
+def shapes_for(cfg) -> tuple:
+    if isinstance(cfg, DONNConfig):
+        return (DONN_SHAPES[1],) if cfg.n >= 500 else (DONN_SHAPES[0],)
+    return LM_SHAPES
+
+
+def cell_status(cfg, cell: ShapeCell) -> Optional[str]:
+    """None if the cell runs; otherwise a documented skip reason."""
+    if isinstance(cfg, DONNConfig):
+        return None
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "SKIP(full-attention): 524k dense-KV decode is the quadratic-"
+            "attention regime this cell excludes (DESIGN.md §5)"
+        )
+    return None
+
+
+def lm_train_specs(cfg: LMConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq, cfg.d_model), cfg.dtype
+        )
+    return specs
+
+
+def lm_prefill_specs(cfg: LMConfig, cell: ShapeCell):
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((cell.global_batch, cell.seq_len), jnp.int32)
+    }
+    if cfg.family == "vlm":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (cell.global_batch, cfg.vision_seq, cfg.d_model), cfg.dtype
+        )
+    return specs
+
+
+def lm_decode_specs(cfg: LMConfig, cell: ShapeCell):
+    B = cell.global_batch
+    cache = shd.abstract_like(lm.cache_specs(cfg, B, cell.seq_len))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def donn_train_specs(cfg: DONNConfig, cell: ShapeCell):
+    B = cell.global_batch
+    if cfg.segmentation:
+        return {
+            "images": jax.ShapeDtypeStruct((B, cfg.n, cfg.n), jnp.float32),
+            "masks": jax.ShapeDtypeStruct((B, cfg.n, cfg.n), jnp.float32),
+        }
+    if cfg.channels > 1:
+        return {
+            "images": jax.ShapeDtypeStruct(
+                (B, cfg.channels, cfg.n, cfg.n), jnp.float32
+            ),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    return {
+        "images": jax.ShapeDtypeStruct((B, cfg.n, cfg.n), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_name: str, smoke: bool = False):
+    """(arch, shape) -> (cfg, cell, kind, specs dict)."""
+    cfg = get_config(arch, smoke=smoke)
+    cells = {c.name: c for c in shapes_for(cfg)}
+    if shape_name not in cells:
+        raise KeyError(f"{arch}: unknown shape {shape_name!r} (has {list(cells)})")
+    cell = cells[shape_name]
+    if isinstance(cfg, DONNConfig):
+        return cfg, cell, "train", donn_train_specs(cfg, cell)
+    if cell.kind == "train":
+        return cfg, cell, "train", lm_train_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return cfg, cell, "prefill", lm_prefill_specs(cfg, cell)
+    return cfg, cell, "decode", lm_decode_specs(cfg, cell)

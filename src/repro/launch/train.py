@@ -1,0 +1,153 @@
+"""Fault-tolerant training launcher.
+
+Runs real training of any registered architecture (reduced or full config)
+on whatever devices exist, with:
+- checkpoint/restart: atomic sharded checkpoints every --ckpt-every steps,
+  automatic resume from LATEST (elastic: the restore reslices to the
+  current mesh, so you can restart on a different device count);
+- preemption safety: SIGTERM/SIGINT triggers save-and-exit(143);
+- straggler monitoring: per-step EMA + z-score flags;
+- background prefetch of the (deterministic, per-host-shardable) synthetic
+  data stream.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck --ckpt-every 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.data.pipeline import Prefetcher, StepMonitor
+from repro.data.synthetic import token_batch_iterator
+from repro.launch import mesh as mesh_mod
+from repro.models import get_config
+from repro.models.config import LMConfig
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import sharding as shd
+from repro.runtime import steps as steps_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 4x2")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg: LMConfig = get_config(args.arch, smoke=args.smoke)
+    data, model = (int(x) for x in args.mesh.split("x"))
+    mesh = mesh_mod.make_host_mesh(data, model)
+    optimizer = AdamW(
+        lr=warmup_cosine(args.lr, args.warmup, args.steps),
+        weight_decay=0.01, grad_clip_norm=1.0,
+    )
+
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch_specs["vision"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.vision_seq, cfg.d_model), cfg.dtype
+        )
+    step_fn, s_shard, b_shard, sspecs = steps_mod.compile_train_step(
+        cfg, mesh, batch_specs, optimizer=optimizer, accum_steps=args.accum
+    )
+
+    # ---- init or elastic resume ----
+    start_step = 0
+    if args.ckpt_dir and (last := ckpt.latest_step(args.ckpt_dir)) is not None:
+        print(f"[train] resuming from step {last}")
+        state = ckpt.restore(
+            args.ckpt_dir, last, shd.abstract_like(sspecs), shardings=s_shard
+        )
+        start_step = last
+    else:
+        state = steps_mod.init_train_state(cfg, jax.random.PRNGKey(args.seed),
+                                           optimizer)
+        state = jax.device_put(state, s_shard)
+
+    # ---- preemption handling ----
+    stop = {"now": False}
+
+    def _handler(signum, frame):
+        print(f"[train] signal {signum}: checkpoint-and-exit")
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, _handler)
+    signal.signal(signal.SIGINT, _handler)
+
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=args.keep) \
+        if args.ckpt_dir else None
+    monitor = StepMonitor()
+    raw_it = token_batch_iterator(args.batch, args.seq, cfg.vocab,
+                                  seed=args.seed)
+    for _ in range(start_step):  # resume: replay the deterministic stream
+        next(raw_it)
+
+    def to_device(b):
+        if cfg.family == "vlm":
+            import numpy as np
+
+            r = np.random.default_rng(0)
+            b = dict(b)
+            b["vision"] = r.normal(
+                0, 1, (args.batch, cfg.vision_seq, cfg.d_model)
+            ).astype("float32")
+        return jax.device_put(b, b_shard)
+
+    it = Prefetcher(raw_it, depth=2, transform=to_device)
+    losses = []
+    for i in range(start_step, args.steps):
+        batch = next(it)
+        monitor.start()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        monitor.stop(i)
+        losses.append(loss)
+        if i % args.log_every == 0:
+            print(f"step {i:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"dt {monitor.ema:.3f}s", flush=True)
+        if saver and ((i + 1) % args.ckpt_every == 0 or stop["now"]):
+            saver.save(i + 1, state)
+        if stop["now"]:
+            if saver:
+                saver.wait()
+            print("[train] preempted; checkpoint committed")
+            sys.exit(143)
+    if saver:
+        saver.save(args.steps, state)
+        saver.wait()
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+          f"stragglers {len(monitor.stragglers)}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"losses": losses,
+                       "stragglers": monitor.stragglers}, f)
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.config import LMConfig, LM_SHAPES, ShapeCell, get_config, list_archs
+from repro.models import lm
+
+__all__ = ["LMConfig", "LM_SHAPES", "ShapeCell", "get_config", "list_archs", "lm"]

@@ -1,0 +1,239 @@
+"""Attention: GQA/MQA/MHA with chunked online-softmax (flash-style) kernels.
+
+- ``chunked_attention``: streams KV in chunks with running (max, denom, acc)
+  so the (Sq x Skv) score matrix is never materialized — required for the
+  32k prefill cells.  Each chunk body is jax.checkpoint'd so reverse-mode
+  stores only the O(S) carries, not the O(S*chunk) probabilities.
+- Sliding-window masks (mixtral SWA / recurrentgemma local attention).
+- ``decode_attention``: single-token query against a (possibly rolling) KV
+  cache.
+- Cross-attention (llama-3.2-vision style, with tanh gate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+from repro.models.layers import apply_rotary, rope_angles
+from repro.nn import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- specs
+def attention_spec(cfg: LMConfig, cross: bool = False):
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, H * Dh), jnp.float32, ("embed", "heads")),
+        "wk": ParamSpec((d, KV * Dh), jnp.float32, ("embed", "kv_heads")),
+        "wv": ParamSpec((d, KV * Dh), jnp.float32, ("embed", "kv_heads")),
+        "wo": ParamSpec((H * Dh, d), jnp.float32, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((H * Dh,), jnp.float32, ("heads",), init="zeros")
+        spec["bk"] = ParamSpec((KV * Dh,), jnp.float32, ("kv_heads",), init="zeros")
+        spec["bv"] = ParamSpec((KV * Dh,), jnp.float32, ("kv_heads",), init="zeros")
+    if cross:
+        spec["gate"] = ParamSpec((1,), jnp.float32, (None,), init="zeros")
+    return spec
+
+
+def qkv_proj(p, x, cfg: LMConfig):
+    """x (B, S, d) -> q (B,S,H,Dh), k/v (B,S,KV,Dh)."""
+    dt = cfg.dtype
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return (
+        q.reshape(B, S, H, Dh),
+        k.reshape(B, S, KV, Dh),
+        v.reshape(B, S, KV, Dh),
+    )
+
+
+# ------------------------------------------------- chunked online softmax
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Skv, KV, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+    chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,  # valid cache length (decode)
+    p_bf16: bool = False,
+) -> jax.Array:
+    B, Sq, H, Dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Skv)
+    if Skv % chunk:  # pad KV to a chunk multiple; padding is masked off
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.asarray(Skv)
+        Skv = Skv + pad
+    nchunks = Skv // chunk
+    qg = (q * (Dh**-0.5)).reshape(B, Sq, KV, G, Dh)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        k_c = jax.lax.dynamic_slice(k, (0, idx * chunk, 0, 0), (B, chunk, KV, Dh))
+        v_c = jax.lax.dynamic_slice(v, (0, idx * chunk, 0, 0), (B, chunk, KV, Dh))
+        s = jnp.einsum(
+            "bqkgd,bckd->bkgqc", qg, k_c, preferred_element_type=jnp.float32
+        )
+        k_pos = idx * chunk + jnp.arange(chunk)
+        allow = jnp.ones((Sq, chunk), bool)
+        if causal:
+            allow = allow & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            allow = allow & (k_pos[None, :] > q_pos[:, None] - window)
+        if kv_len is not None:
+            allow = allow & (k_pos[None, :] < kv_len)
+        s = jnp.where(allow, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * allow.astype(jnp.float32)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if p_bf16:
+            # halve the dominant HBM term (p round-trips); f32 accumulate
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(jnp.bfloat16),
+                            v_c.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p, v_c.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, G, Sq), jnp.float32),
+        jnp.zeros((B, KV, G, Sq, Dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, jnp.arange(nchunks)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, Sq, Dh)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def self_attention(
+    p,
+    x,
+    cfg: LMConfig,
+    positions: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+):
+    """Full training/prefill self-attention over x (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, x, cfg)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = rope_angles(cfg, pos)
+        q = apply_rotary(q, cos, sin, cfg)
+        k = apply_rotary(k, cos, sin, cfg)
+    w = cfg.window if window is None else window
+    out = chunked_attention(
+        q, k, v, causal=True, window=w, chunk=cfg.attn_chunk,
+        p_bf16=cfg.attn_p_bf16,
+    )
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"].astype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ decode
+def decode_self_attention(
+    p,
+    x,  # (B, 1, d)
+    cache_k,  # (B, L, KV, Dh) — L = physical cache length
+    cache_v,
+    pos: jax.Array,  # scalar int32: current absolute position
+    cfg: LMConfig,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+):
+    """One-token decode against a (possibly rolling) KV cache.
+
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).  For sliding-window
+    archs the physical cache is a rolling buffer of size `window`; writes
+    wrap (pos % L) and relative positions are handled by the mask.
+    """
+    B = x.shape[0]
+    L = cache_k.shape[1]
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    q, k, v = qkv_proj(p, x, cfg)
+    if use_rope:
+        posv = jnp.reshape(pos, (1,))
+        cos, sin = rope_angles(cfg, posv)
+        q = apply_rotary(q, cos, sin, cfg)
+        k = apply_rotary(k, cos, sin, cfg)
+    w = cfg.window if window is None else window
+    rolling = 0 < w <= L
+    slot = jnp.mod(pos, L) if rolling else pos
+    from repro.runtime.sharding import constrain as _constrain
+
+    kv_axes = ("batch", None, "kv_heads", "head")
+    k = _constrain(k, kv_axes)
+    v = _constrain(v, kv_axes)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    # align q / new-kv layouts with the cache sharding so GSPMD computes
+    # Dh-partial scores + a tiny all-reduce instead of "involuntarily
+    # rematerializing" (all-gathering) the whole cache
+    from repro.runtime.sharding import constrain
+
+    qg = (q * (Dh**-0.5)).reshape(B, 1, KV, -1, Dh)
+    qg = constrain(qg, ("batch", None, "kv_heads", None, "head"))
+    s = jnp.einsum(
+        "bqkgd,blkd->bkgql", qg, cache_k, preferred_element_type=jnp.float32
+    )
+    s = constrain(s, ("batch", "kv_heads", None, None, None))
+    # absolute position of each cache slot
+    idx = jnp.arange(L)
+    if rolling:
+        # slot i holds absolute position: largest p <= pos with p % L == i
+        # (negative => the slot has never been written — mask it off)
+        abs_pos = pos - jnp.mod(pos - idx, L)
+    else:
+        abs_pos = idx
+    allow = (abs_pos >= 0) & (abs_pos <= pos)
+    if w > 0:
+        allow = allow & (abs_pos > pos - w)
+    s = jnp.where(allow[None, None, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bkgqd", prob, cache_v.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(B, 1, cfg.n_heads * Dh).astype(x.dtype)
+    return out @ p["wo"].astype(cfg.dtype), cache_k, cache_v
+
+
+# ----------------------------------------------------------- cross-attend
+def cross_attention(p, x, vision_kv, cfg: LMConfig):
+    """x (B, S, d) attends over precomputed vision states (B, Sv, d).
+
+    Non-causal; gated with tanh(gate) (llama-3.2-vision style).
+    """
+    B, S, _ = x.shape
+    dt = cfg.dtype
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, Dh)
+    k = (vision_kv @ p["wk"].astype(dt)).reshape(B, -1, KV, Dh)
+    v = (vision_kv @ p["wv"].astype(dt)).reshape(B, -1, KV, Dh)
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, H * Dh) @ p["wo"].astype(dt)
+    return out * jnp.tanh(p["gate"].astype(dt))

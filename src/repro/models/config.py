@@ -1,0 +1,124 @@
+"""LM architecture configuration + registry for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax.numpy as jnp
+
+DENSE, MOE, VLM, AUDIO, SSM, HYBRID, DONN_FAMILY = (
+    "dense", "moe", "vlm", "audio", "ssm", "hybrid", "donn",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Architecture description covering all six assigned families."""
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int  # 0 for attention-free (ssm)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"  # swiglu | gelu | geglu
+    norm: str = "rms"  # rms | ln
+    rope_theta: float = 1e4
+    partial_rotary: float = 1.0  # glm4: 0.5
+    tie_embeddings: bool = False
+    # --- attention window (0 = full causal) ---
+    window: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 2
+    expert_d_ff: int = 0
+    dense_residual_ff: int = 0  # arctic: parallel dense FFN
+    capacity_factor: float = 1.25
+    moe_group: int = 0  # token-group size for dispatch (0 = min(S, 4096))
+    # --- VLM (cross-attention) ---
+    cross_attn_period: int = 0  # 1 cross-attn layer per this many layers
+    vision_seq: int = 0  # precomputed patch-embedding length (frontend stub)
+    # --- SSM (mamba1) ---
+    ssm_state: int = 0
+    d_inner: int = 0
+    d_conv: int = 4
+    dt_rank: int = 0
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: tuple = ()  # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0
+    logit_softcap: float = 0.0
+    # --- numerics ---
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # --- runtime hints ---
+    attn_chunk: int = 1024  # KV-chunk for online-softmax attention
+    attn_p_bf16: bool = False  # store softmax probs bf16 for the PV matmul
+    #                            (halves the dominant score-traffic term;
+    #                            accumulation stays f32)
+    scan_chunk: int = 128  # recurrence chunk for ssm/rglru
+    remat: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == SSM
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the long_500k cell? (DESIGN.md §5)."""
+        return self.family in (SSM, HYBRID) or self.window > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) cell of the dry-run matrix."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+
+_REGISTRY: dict[str, Callable[[], Any]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_config(name: str, smoke: bool = False):
+    """Return the registered FULL (or SMOKE) config for an architecture id."""
+    if name not in _REGISTRY:
+        # late-import the configs package so registration side-effects run
+        import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    full, smoke_cfg = _REGISTRY[name]()
+    return smoke_cfg if smoke else full
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

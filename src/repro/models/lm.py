@@ -1,0 +1,562 @@
+"""LM model assembly: param specs, forward, decode step, loss — all families.
+
+Layer application uses lax.scan over stacked per-layer parameters (leading
+"layers" axis) so the HLO stays O(1) in depth; each block body is
+jax.checkpoint'd when cfg.remat.  Heterogeneous families scan over periods:
+
+- vlm:    periods of (cross_attn_period-1) self blocks + 1 gated cross block
+- hybrid: periods of (rec, rec, attn) + trailing rec layers
+
+The loss is a sequence-chunked softmax cross-entropy: logits are never
+materialized at (B, S, V); each chunk is recomputed in the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+from repro.models.config import (
+    AUDIO, DENSE, HYBRID, MOE, SSM, VLM, LMConfig,
+)
+from repro.models.layers import (
+    apply_mlp, apply_norm, embed_spec, embed_tokens, mlp_spec, norm_spec,
+    unembed,
+)
+from repro.nn import ParamSpec, init_params, is_spec
+
+
+# ------------------------------------------------------------------ helpers
+def stack_specs(spec, n: int):
+    """Add a leading stacked-layer axis to every ParamSpec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (n,) + s.shape,
+            s.dtype,
+            ("layers",) + (s.logical_axes or (None,) * len(s.shape)),
+            init=s.init,
+            scale=s.scale,
+        ),
+        spec,
+        is_leaf=is_spec,
+    )
+
+
+def _maybe_remat(fn, cfg: LMConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ------------------------------------------------------------- block specs
+def dense_block_spec(cfg: LMConfig):
+    return {
+        "ln1": norm_spec(cfg),
+        "attn": attn.attention_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def moe_block_spec(cfg: LMConfig):
+    return {
+        "ln1": norm_spec(cfg),
+        "attn": attn.attention_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "moe": moe_mod.moe_spec(cfg),
+    }
+
+
+def cross_block_spec(cfg: LMConfig):
+    return {
+        "ln1": norm_spec(cfg),
+        "xattn": attn.attention_spec(cfg, cross=True),
+        "ln2": norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+        "gate_ffn": ParamSpec((1,), jnp.float32, (None,), init="zeros"),
+    }
+
+
+def ssm_block_spec(cfg: LMConfig):
+    return {"ln1": norm_spec(cfg), "mamba": ssm_mod.mamba_spec(cfg)}
+
+
+def rec_block_spec(cfg: LMConfig):
+    return {
+        "ln1": norm_spec(cfg),
+        "rec": rg.rglru_spec(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": mlp_spec(cfg),
+    }
+
+
+def _hybrid_counts(cfg: LMConfig):
+    p = len(cfg.block_pattern)
+    n_periods, tail = divmod(cfg.n_layers, p)
+    n_rec_per = sum(1 for b in cfg.block_pattern if b == "rec")
+    assert cfg.block_pattern.count("attn") == 1 and tail < p
+    return n_periods, n_rec_per, tail
+
+
+def _vlm_counts(cfg: LMConfig):
+    n_periods = cfg.n_layers // cfg.cross_attn_period
+    self_per = cfg.cross_attn_period - 1
+    assert n_periods * cfg.cross_attn_period == cfg.n_layers
+    return n_periods, self_per
+
+
+def param_specs(cfg: LMConfig):
+    spec: dict[str, Any] = {
+        "embed": embed_spec(cfg),
+        "final_norm": norm_spec(cfg),
+    }
+    if cfg.family in (DENSE, AUDIO):
+        spec["blocks"] = stack_specs(dense_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == MOE:
+        spec["blocks"] = stack_specs(moe_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == SSM:
+        spec["blocks"] = stack_specs(ssm_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == VLM:
+        n_periods, self_per = _vlm_counts(cfg)
+        spec["blocks"] = stack_specs(
+            stack_specs(dense_block_spec(cfg), self_per), n_periods
+        )
+        spec["cross_blocks"] = stack_specs(cross_block_spec(cfg), n_periods)
+    elif cfg.family == HYBRID:
+        n_periods, n_rec_per, tail = _hybrid_counts(cfg)
+        spec["rec_blocks"] = stack_specs(
+            stack_specs(rec_block_spec(cfg), n_rec_per), n_periods
+        )
+        spec["attn_blocks"] = stack_specs(dense_block_spec(cfg), n_periods)
+        if tail:
+            spec["tail_rec"] = stack_specs(rec_block_spec(cfg), tail)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return spec
+
+
+def init(cfg: LMConfig, key):
+    return init_params(param_specs(cfg), key)
+
+
+# ---------------------------------------------------------- block applies
+def _dense_block(p, x, cfg: LMConfig, window=None):
+    x = x + attn.self_attention(p["attn"], apply_norm(p["ln1"], x, cfg), cfg,
+                                window=window)
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def _moe_block(p, x, cfg: LMConfig):
+    x = x + attn.self_attention(p["attn"], apply_norm(p["ln1"], x, cfg), cfg)
+    y, aux = moe_mod.apply_moe(p["moe"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x + y, aux
+
+
+def _ssm_block(p, x, cfg: LMConfig):
+    y, _ = ssm_mod.apply_mamba(p["mamba"], apply_norm(p["ln1"], x, cfg), cfg)
+    return x + y, jnp.float32(0.0)
+
+
+def _rec_block(p, x, cfg: LMConfig):
+    y, _ = rg.apply_rglru_block(p["rec"], apply_norm(p["ln1"], x, cfg), cfg)
+    x = x + y
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x, jnp.float32(0.0)
+
+
+def _cross_block(p, x, vision, cfg: LMConfig):
+    x = x + attn.cross_attention(p["xattn"], apply_norm(p["ln1"], x, cfg),
+                                 vision, cfg)
+    dt = cfg.dtype
+    x = x + jnp.tanh(p["gate_ffn"].astype(dt)) * apply_mlp(
+        p["mlp"], apply_norm(p["ln2"], x, cfg), cfg
+    )
+    return x, jnp.float32(0.0)
+
+
+def _seq_shard(x):
+    """Sequence-parallel residual stream at layer boundaries (DESIGN.md §8).
+
+    Saved scan carries shard S over the TP axis; no-op without a mesh
+    context or when S doesn't divide (e.g. decode S=1)."""
+    from repro.runtime.sharding import constrain
+
+    return constrain(x, ("batch", "seq", None))
+
+
+# ------------------------------------------------------------ full forward
+def forward(params, tokens, cfg: LMConfig, vision: Optional[jax.Array] = None):
+    """tokens (B, S) -> final hidden states (B, S, d) [pre-unembed]."""
+    x = _seq_shard(embed_tokens(params["embed"], tokens, cfg))
+
+    if cfg.family in (DENSE, AUDIO, MOE, SSM):
+        body_fn = {
+            DENSE: _dense_block, AUDIO: _dense_block,
+            MOE: _moe_block, SSM: _ssm_block,
+        }[cfg.family]
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = body_fn(lp, x, cfg)
+            return (_seq_shard(x), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, jnp.float32(0.0)), params["blocks"]
+        )
+    elif cfg.family == VLM:
+        if vision is None:
+            raise ValueError("vlm forward needs vision embeddings")
+
+        def self_body(carry, lp):
+            x, aux = carry
+            x, a = _dense_block(lp, x, cfg)
+            return (_seq_shard(x), aux + a), None
+
+        def period(carry, lps):
+            # remat at the PERIOD level: only period-boundary activations
+            # are saved; the inner per-layer carries recompute in backward
+            self_p, cross_p = lps
+            carry, _ = jax.lax.scan(self_body, carry, self_p)
+            x, aux = carry
+            x, a = _cross_block(cross_p, x, vision, cfg)
+            return (_seq_shard(x), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            _maybe_remat(period, cfg),
+            (x, jnp.float32(0.0)),
+            (params["blocks"], params["cross_blocks"]),
+        )
+    elif cfg.family == HYBRID:
+        n_periods, n_rec_per, tail = _hybrid_counts(cfg)
+
+        def rec_body(carry, lp):
+            x, aux = carry
+            x, a = _rec_block(lp, x, cfg)
+            return (_seq_shard(x), aux + a), None
+
+        def period(carry, lps):
+            # period-level remat (see vlm note above)
+            rec_p, attn_p = lps
+            carry, _ = jax.lax.scan(rec_body, carry, rec_p)
+            x, aux = carry
+            x, a = _dense_block(attn_p, x, cfg, window=cfg.window)
+            return (_seq_shard(x), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            _maybe_remat(period, cfg),
+            (x, jnp.float32(0.0)),
+            (params["rec_blocks"], params["attn_blocks"]),
+        )
+        if tail:
+            (x, aux), _ = jax.lax.scan(
+                _maybe_remat(rec_body, cfg), (x, aux), params["tail_rec"]
+            )
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def logits_fn(params, tokens, cfg: LMConfig, vision=None):
+    x, _ = forward(params, tokens, cfg, vision)
+    return unembed(params["embed"], x, cfg)
+
+
+# ------------------------------------------------------------------- loss
+def chunked_xent(params, x, labels, cfg: LMConfig, chunk: int = 512):
+    """Sequence-chunked softmax cross-entropy; never stores (B, S, V)."""
+    B, S, d = x.shape
+    chunk = max(1, min(chunk, S))
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    Sp = S + pad
+    nch = Sp // chunk
+    xc = jnp.moveaxis(x.reshape(B, nch, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nch, chunk), 1, 0)
+
+    def body(carry, xs):
+        xx, ll = xs
+        logits = unembed(params["embed"], xx, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        valid = ll >= 0
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: LMConfig, aux_coef: float = 0.01):
+    """batch: {"tokens": (B, S) int32, "labels": (B, S) int32 (-1 = pad)}.
+
+    For vlm, batch also carries {"vision": (B, Sv, d)} (frontend stub).
+    """
+    vision = batch.get("vision")
+    x, aux = forward(params, batch["tokens"], cfg, vision)
+    loss = chunked_xent(params, x, batch["labels"], cfg)
+    if cfg.family == MOE:
+        loss = loss + aux_coef * aux
+    return loss
+
+
+# ------------------------------------------------------------------ cache
+def cache_specs(cfg: LMConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct-compatible ParamSpec tree for the decode cache."""
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+
+    def kv(n_layers, length):
+        ax = ("layers", "batch", None, "kv_heads", "head")
+        return {
+            "k": ParamSpec((n_layers, batch, length, KV, Dh), dt, ax, init="zeros"),
+            "v": ParamSpec((n_layers, batch, length, KV, Dh), dt, ax, init="zeros"),
+        }
+
+    if cfg.family in (DENSE, AUDIO, MOE):
+        L = min(cache_len, cfg.window) if cfg.window else cache_len
+        return kv(cfg.n_layers, L)
+    if cfg.family == SSM:
+        return {
+            "conv": ParamSpec(
+                (cfg.n_layers, batch, cfg.d_conv - 1, cfg.d_inner),
+                dt, ("layers", "batch", None, "mlp"), init="zeros",
+            ),
+            "h": ParamSpec(
+                (cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                jnp.float32, ("layers", "batch", "mlp", None), init="zeros",
+            ),
+        }
+    if cfg.family == VLM:
+        n_periods, self_per = _vlm_counts(cfg)
+        c = kv(n_periods * self_per, cache_len)
+        c["self_shape"] = ()  # marker
+        del c["self_shape"]
+        # cross-attn K/V over vision states, computed once at prefill
+        ax = ("layers", "batch", None, "kv_heads", "head")
+        c["xk"] = ParamSpec(
+            (n_periods, batch, cfg.vision_seq, KV, Dh), dt, ax, init="zeros"
+        )
+        c["xv"] = ParamSpec(
+            (n_periods, batch, cfg.vision_seq, KV, Dh), dt, ax, init="zeros"
+        )
+        return c
+    if cfg.family == HYBRID:
+        n_periods, n_rec_per, tail = _hybrid_counts(cfg)
+        L = min(cache_len, cfg.window) if cfg.window else cache_len
+        rec_ax = ("layers", None, "batch", None, "mlp")
+        c = kv(n_periods, L)
+        c["rec_conv"] = ParamSpec(
+            (n_periods, n_rec_per, batch, cfg.d_conv - 1, cfg.lru_width),
+            dt, rec_ax, init="zeros",
+        )
+        c["rec_h"] = ParamSpec(
+            (n_periods, n_rec_per, batch, cfg.lru_width),
+            jnp.float32, ("layers", None, "batch", "mlp"), init="zeros",
+        )
+        if tail:
+            c["tail_conv"] = ParamSpec(
+                (tail, batch, cfg.d_conv - 1, cfg.lru_width),
+                dt, ("layers", "batch", None, "mlp"), init="zeros",
+            )
+            c["tail_h"] = ParamSpec(
+                (tail, batch, cfg.lru_width),
+                jnp.float32, ("layers", "batch", "mlp"), init="zeros",
+            )
+        return c
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: LMConfig, batch: int, cache_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, cache_len),
+        is_leaf=is_spec,
+    )
+
+
+# ------------------------------------------------------------ decode step
+def _decode_dense_block(p, x, ck, cv, pos, cfg, window=None):
+    y, ck, cv = attn.decode_self_attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg), ck, cv, pos, cfg,
+        window=window,
+    )
+    x = x + y
+    x = x + apply_mlp(p["mlp"], apply_norm(p["ln2"], x, cfg), cfg)
+    return x, ck, cv
+
+
+def _idx(a, i):
+    return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+
+def _upd(a, val, i):
+    return jax.lax.dynamic_update_index_in_dim(a, val, i, 0)
+
+
+def decode_step(params, cache, tokens, pos, cfg: LMConfig):
+    """One decode step. tokens (B, 1), pos scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).  Mutable cache arrays travel in
+    the scan *carry* and are updated in place (dynamic_update_index_in_dim),
+    so a donated cache buffer is reused instead of double-buffered through
+    scan xs/ys.
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    if cfg.family in (DENSE, AUDIO, MOE):
+        def body(carry, xs):
+            x, K, V = carry
+            lp, i = xs
+            ck, cv = _idx(K, i), _idx(V, i)
+            if cfg.family == MOE:
+                y, ck, cv = attn.decode_self_attention(
+                    lp["attn"], apply_norm(lp["ln1"], x, cfg), ck, cv, pos, cfg
+                )
+                x = x + y
+                y2, _ = moe_mod.apply_moe(
+                    lp["moe"], apply_norm(lp["ln2"], x, cfg), cfg
+                )
+                x = x + y2
+            else:
+                x, ck, cv = _decode_dense_block(lp, x, ck, cv, pos, cfg)
+            return (x, _upd(K, ck, i), _upd(V, cv, i)), None
+
+        n = cfg.n_layers
+        (x, nk, nv), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["blocks"], jnp.arange(n)),
+        )
+        new_cache = {"k": nk, "v": nv}
+    elif cfg.family == SSM:
+        def body(carry, xs):
+            x, C, H = carry
+            lp, i = xs
+            y, (nconv, nh) = ssm_mod.apply_mamba(
+                lp["mamba"], apply_norm(lp["ln1"], x, cfg), cfg,
+                conv_state=_idx(C, i), ssm_state=_idx(H, i),
+            )
+            return (x + y, _upd(C, nconv, i), _upd(H, nh, i)), None
+
+        (x, nc, nh), _ = jax.lax.scan(
+            body, (x, cache["conv"], cache["h"]),
+            (params["blocks"], jnp.arange(cfg.n_layers)),
+        )
+        new_cache = {"conv": nc, "h": nh}
+    elif cfg.family == VLM:
+        n_periods, self_per = _vlm_counts(cfg)
+
+        def self_body(carry, xs):
+            x, K, V = carry
+            lp, li = xs  # li = global self-layer index
+            ck, cv = _idx(K, li), _idx(V, li)
+            x, ck, cv = _decode_dense_block(lp, x, ck, cv, pos, cfg)
+            return (x, _upd(K, ck, li), _upd(V, cv, li)), None
+
+        def period(carry, xs):
+            x, K, V = carry
+            self_p, cross_p, xk, xv, i = xs
+            (x, K, V), _ = jax.lax.scan(
+                self_body, (x, K, V),
+                (self_p, i * self_per + jnp.arange(self_per)),
+            )
+            # cross-attn against cached vision K/V (non-causal, no rope)
+            B = x.shape[0]
+            xn = apply_norm(cross_p["ln1"], x, cfg)
+            q = xn @ cross_p["xattn"]["wq"].astype(cfg.dtype)
+            qg = (q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+                  * (cfg.head_dim**-0.5)).reshape(
+                B, 1, cfg.n_kv_heads, -1, cfg.head_dim
+            )
+            s = jnp.einsum("bqkgd,blkd->bkgql", qg, xk,
+                           preferred_element_type=jnp.float32)
+            prob = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgql,blkd->bkgqd", prob, xv.astype(jnp.float32))
+            o = jnp.moveaxis(o, 3, 1).reshape(B, 1, cfg.n_heads * cfg.head_dim)
+            o = (o.astype(cfg.dtype) @ cross_p["xattn"]["wo"].astype(cfg.dtype))
+            x = x + o * jnp.tanh(cross_p["xattn"]["gate"].astype(cfg.dtype))
+            x = x + jnp.tanh(cross_p["gate_ffn"].astype(cfg.dtype)) * apply_mlp(
+                cross_p["mlp"], apply_norm(cross_p["ln2"], x, cfg), cfg
+            )
+            return (x, K, V), None
+
+        (x, nk, nv), _ = jax.lax.scan(
+            period, (x, cache["k"], cache["v"]),
+            (params["blocks"], params["cross_blocks"],
+             cache["xk"], cache["xv"], jnp.arange(n_periods)),
+        )
+        new_cache = dict(cache)
+        new_cache["k"] = nk
+        new_cache["v"] = nv
+    elif cfg.family == HYBRID:
+        n_periods, n_rec_per, tail = _hybrid_counts(cfg)
+
+        def rec_block_step(lp, x, conv, h):
+            y, (nconv, nh) = rg.apply_rglru_block(
+                lp["rec"], apply_norm(lp["ln1"], x, cfg), cfg,
+                conv_state=conv, lru_state=h,
+            )
+            x = x + y
+            x = x + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg), cfg)
+            return x, nconv, nh
+
+        def period(carry, xs):
+            x, RC, RH, K, V = carry
+            rec_p, attn_p, i = xs
+
+            def rec_body(carry2, xs2):
+                x, RC, RH = carry2
+                lp, j = xs2
+                x, nconv, nh = rec_block_step(
+                    lp, x, _idx(_idx(RC, i), j), _idx(_idx(RH, i), j)
+                )
+                RC = _upd(RC, _upd(_idx(RC, i), nconv, j), i)
+                RH = _upd(RH, _upd(_idx(RH, i), nh, j), i)
+                return (x, RC, RH), None
+
+            (x, RC, RH), _ = jax.lax.scan(
+                rec_body, (x, RC, RH), (rec_p, jnp.arange(n_rec_per))
+            )
+            ck, cv = _idx(K, i), _idx(V, i)
+            x, ck, cv = _decode_dense_block(
+                attn_p, x, ck, cv, pos, cfg, window=cfg.window
+            )
+            return (x, RC, RH, _upd(K, ck, i), _upd(V, cv, i)), None
+
+        (x, nrc, nrh, nk, nv), _ = jax.lax.scan(
+            period,
+            (x, cache["rec_conv"], cache["rec_h"], cache["k"], cache["v"]),
+            (params["rec_blocks"], params["attn_blocks"],
+             jnp.arange(n_periods)),
+        )
+        new_cache = {"rec_conv": nrc, "rec_h": nrh, "k": nk, "v": nv}
+        if tail:
+            def tail_body(carry, xs):
+                x, TC, TH = carry
+                lp, j = xs
+                x, nconv, nh = rec_block_step(lp, x, _idx(TC, j), _idx(TH, j))
+                return (x, _upd(TC, nconv, j), _upd(TH, nh, j)), None
+
+            (x, ntc, nth), _ = jax.lax.scan(
+                tail_body, (x, cache["tail_conv"], cache["tail_h"]),
+                (params["tail_rec"], jnp.arange(tail)),
+            )
+            new_cache["tail_conv"] = ntc
+            new_cache["tail_h"] = nth
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts blocks (mixtral-8x7b, arctic-480b).
+
+Capacity-based GShard-style einsum dispatch: routing lowers to one-hot
+matmuls whose resharding XLA SPMD schedules (no hand-written all-to-all),
+with the expert dim sharded over the "model" mesh axis (EP) and expert-
+internal dims over "data" (FSDP).  Tokens are grouped (per-sequence by
+default) so the dispatch/combine tensors stay O(group * E * C), and the
+dispatch matmul overhead is ~S*k*cf/ (3*f) of the expert FLOPs (logged in
+the roofline notes).
+
+Returns an auxiliary load-balancing loss (Switch-style) alongside outputs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+from repro.models.layers import apply_mlp, mlp_spec
+from repro.nn import ParamSpec
+
+
+def moe_spec(cfg: LMConfig):
+    d, E = cfg.d_model, cfg.n_experts
+    f = cfg.expert_d_ff or cfg.d_ff
+    spec = {
+        "router": ParamSpec((d, E), jnp.float32, ("embed", None)),
+        "w_gate": ParamSpec((E, d, f), jnp.float32, ("expert", "embed", "mlp")),
+        "w_up": ParamSpec((E, d, f), jnp.float32, ("expert", "embed", "mlp")),
+        "w_down": ParamSpec((E, f, d), jnp.float32, ("expert", "mlp", "embed")),
+    }
+    if cfg.dense_residual_ff:
+        spec["dense"] = mlp_spec(cfg, cfg.dense_residual_ff)
+    return spec
+
+
+def expert_capacity(cfg: LMConfig, group: int) -> int:
+    c = int(math.ceil(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)  # multiple of 4, >= 4
+
+
+def apply_moe(p, x, cfg: LMConfig, group_size: int = 0):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = cfg.dtype
+    g = group_size or cfg.moe_group or min(S, 4096)
+    T = B * S
+    if T % g:
+        g = T  # degenerate fallback (smoke shapes)
+    xg = x.reshape(T // g, g, d)  # (G, g, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+    weights, idx = jax.lax.top_k(probs, k)  # (G, g, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9
+    )
+
+    C = expert_capacity(cfg, g)
+    eh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, g, k, E)
+    # position of each (token, slot) within its expert: slot-major cumsum
+    ehf = eh.reshape(-1, g * k, E)
+    pos = jnp.cumsum(ehf, axis=1) - ehf  # positions start at 0
+    pos = pos.reshape(-1, g, k, E)
+    pos_slot = jnp.sum(pos * eh, axis=-1)  # (G, g, k)
+    keep = (pos_slot < C).astype(jnp.float32)
+    poh = jax.nn.one_hot(pos_slot, C, dtype=jnp.float32)  # (G, g, k, C)
+    # combine[b, t, e, c] = sum_k w * keep * onehot_e * onehot_c
+    combine = jnp.einsum(
+        "gtke,gtkc->gtec", eh * (weights * keep)[..., None], poh
+    ).astype(dt)
+    dispatch = (combine > 0).astype(dt)
+
+    # Layout (EXPERIMENTS.md §Perf/arctic): expert weights stay fully
+    # resident-sharded (expert -> model axis EP, embed -> data axis); the
+    # dispatched activations are constrained to match (E on model, d on
+    # data) so the expert matmuls run as local partials + small
+    # all-reduces instead of GSPMD all-gathering 1.6GB of expert weights
+    # per layer per microbatch.
+    from repro.runtime.sharding import constrain
+
+    dispatch = constrain(dispatch, (None, None, "expert", None),
+                         require="expert")
+    xd = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(dt))
+    xd = constrain(xd, (None, "expert", None, "embed"),
+                   require="expert")
+    h = jnp.einsum("gecd,edf->gecf", xd, p["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xd, p["w_up"].astype(dt))
+    h = constrain(h, (None, "expert", None, None), require="expert")
+    u = constrain(u, (None, "expert", None, None), require="expert")
+    eo = jnp.einsum(
+        "gecf,efd->gecd", jax.nn.silu(h) * u, p["w_down"].astype(dt)
+    )
+    eo = constrain(eo, (None, "expert", None, "embed"),
+                   require="expert")
+    out = jnp.einsum("gtec,gecd->gtd", combine, eo).reshape(B, S, d)
+
+    # Switch-style load-balancing auxiliary loss
+    me = jnp.mean(probs, axis=1)  # (G, E) mean router prob
+    ce = jnp.mean(eh[:, :, 0, :], axis=1)  # (G, E) top-1 assignment fraction
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    if cfg.dense_residual_ff:
+        out = out + apply_mlp(p["dense"], x, cfg)
+    return out, aux

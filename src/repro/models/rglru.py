@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (recurrentgemma-9b / Griffin).
+
+Recurrent block: two input branches — (linear -> causal conv -> RG-LRU) and
+(linear -> GeLU) — multiplied, then projected out.  The RG-LRU recurrence:
+
+    r_t = sigmoid(blockdiag(W_a) x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(blockdiag(W_x) x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(-Lambda) * r_t)          (a = sigmoid(Lambda))
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Gates use block-diagonal weights with n_heads blocks (Griffin's design).
+Scan is chunked like the mamba block (checkpointed chunk bodies).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+from repro.nn import ParamSpec
+
+RG_C = 8.0
+
+
+def rglru_spec(cfg: LMConfig):
+    d, lru, h = cfg.d_model, cfg.lru_width, cfg.n_heads
+    bs = lru // h  # gate block size
+    return {
+        "w_in": ParamSpec((d, lru), jnp.float32, ("embed", "mlp")),
+        "w_gate_branch": ParamSpec((d, lru), jnp.float32, ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.d_conv, lru), jnp.float32, (None, "mlp"),
+                            init="normal", scale=0.5),
+        "conv_b": ParamSpec((lru,), jnp.float32, ("mlp",), init="zeros"),
+        "w_a": ParamSpec((h, bs, bs), jnp.float32, ("heads", None, None)),
+        "b_a": ParamSpec((lru,), jnp.float32, ("mlp",), init="zeros"),
+        "w_x": ParamSpec((h, bs, bs), jnp.float32, ("heads", None, None)),
+        "b_x": ParamSpec((lru,), jnp.float32, ("mlp",), init="zeros"),
+        "lam": ParamSpec((lru,), jnp.float32, ("mlp",), init="rglru_lambda"),
+        "w_out": ParamSpec((lru, d), jnp.float32, ("mlp", "embed")),
+    }
+
+
+def _blockdiag(x, w, b, n_heads: int):
+    """x: (B, S, lru) -> block-diagonal linear per head + bias."""
+    B, S, lru = x.shape
+    bs = lru // n_heads
+    xh = x.reshape(B, S, n_heads, bs)
+    y = jnp.einsum("bshi,hij->bshj", xh, w.astype(x.dtype))
+    return y.reshape(B, S, lru) + b.astype(x.dtype)
+
+
+def _lru_scan(a_t, gx, h0, chunk: int):
+    """h_t = a_t h_{t-1} + gx_t; a_t, gx: (B, S, lru) f32; h0: (B, lru)."""
+    B, S, lru = gx.shape
+    chunk = max(1, min(chunk, S))
+    pad = (-S) % chunk
+    if pad:
+        a_t = jnp.pad(a_t, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nch = Sp // chunk
+    a_c = jnp.moveaxis(a_t.reshape(B, nch, chunk, lru), 0, 2)
+    g_c = jnp.moveaxis(gx.reshape(B, nch, chunk, lru), 0, 2)
+
+    def chunk_body(h, xs):
+        ac, gc = xs
+
+        def step(hh, ss):
+            a1, g1 = ss
+            hh = a1 * hh + g1
+            return hh, hh
+
+        h, ys = jax.lax.scan(step, h, (ac, gc))
+        return h, ys
+
+    h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, (a_c, g_c))
+    y = jnp.moveaxis(ys.reshape(Sp, B, lru), 0, 1)[:, :S]
+    return y, h
+
+
+def apply_rglru_block(
+    p,
+    x,
+    cfg: LMConfig,
+    conv_state: Optional[jax.Array] = None,
+    lru_state: Optional[jax.Array] = None,
+):
+    """Full Griffin recurrent block. x: (B, S, d).
+
+    Returns (out, (new_conv_state, new_lru_state)).
+    """
+    from repro.models.ssm import _causal_conv
+
+    B, S, _ = x.shape
+    dt = cfg.dtype
+    lru = cfg.lru_width
+    x1 = x @ p["w_in"].astype(dt)
+    x2 = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
+    x1, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], state=conv_state)
+    # --- RG-LRU ---
+    xf = x1.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(xf, p["w_a"], p["b_a"], cfg.n_heads))
+    i = jax.nn.sigmoid(_blockdiag(xf, p["w_x"], p["b_x"], cfg.n_heads))
+    log_a = -RG_C * r * jax.nn.softplus(-p["lam"])  # (B, S, lru)
+    a_t = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) * (i * xf)
+    h0 = (
+        lru_state
+        if lru_state is not None
+        else jnp.zeros((B, lru), jnp.float32)
+    )
+    y, h = _lru_scan(a_t, gated, h0, cfg.scan_chunk)
+    out = (y.astype(dt) * x2) @ p["w_out"].astype(dt)
+    return out, (new_conv, h)

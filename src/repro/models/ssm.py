@@ -1,0 +1,141 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b).
+
+Training/prefill uses a chunked sequential scan: an outer lax.scan over
+sequence chunks (carry = SSM state at the chunk boundary) whose body is
+jax.checkpoint'd, so reverse-mode stores only O(S/chunk) boundary states,
+with an inner lax.scan over steps computing the per-step discretization
+(dA, dB*x) on the fly — the (B, S, d_inner, state) tensor is never
+materialized.  Decode keeps (conv_state, ssm_state) and advances one step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LMConfig
+from repro.nn import ParamSpec
+
+
+def mamba_spec(cfg: LMConfig):
+    d, di, st, dr, dc = (
+        cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.d_conv,
+    )
+    return {
+        "in_proj": ParamSpec((d, 2 * di), jnp.float32, ("embed", "mlp")),
+        "conv_w": ParamSpec((dc, di), jnp.float32, (None, "mlp"), init="normal",
+                            scale=0.5),
+        "conv_b": ParamSpec((di,), jnp.float32, ("mlp",), init="zeros"),
+        "x_proj": ParamSpec((di, dr + 2 * st), jnp.float32, ("mlp", None)),
+        "dt_w": ParamSpec((dr, di), jnp.float32, (None, "mlp")),
+        "dt_b": ParamSpec((di,), jnp.float32, ("mlp",), init="normal",
+                          scale=0.1),
+        "A_log": ParamSpec((di, st), jnp.float32, ("mlp", None),
+                           init="s4d_a_log"),
+        "D": ParamSpec((di,), jnp.float32, ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), jnp.float32, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv over S. x: (B, S, di), w: (dc, di).
+
+    If ``state`` (B, dc-1, di) is given (decode), it prefixes x.
+    Returns (y, new_state).
+    """
+    dc = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xx = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(dc)
+    )
+    new_state = xx[:, -(dc - 1) :, :] if dc > 1 else None
+    return y + b.astype(x.dtype), new_state
+
+
+def _selective_scan(dt, Bs, Cs, xc, A, h0, chunk: int):
+    """h_t = exp(dt A) h_{t-1} + dt B_t x_t ;  y_t = (C_t . h_t).
+
+    dt, xc: (B, S, di); Bs, Cs: (B, S, st); A: (di, st); h0: (B, di, st).
+    Returns (y (B, S, di) float32, h_final).
+    """
+    B, S, di = xc.shape
+    st = Bs.shape[-1]
+    chunk = max(1, min(chunk, S))
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nch = Sp // chunk
+
+    def to_chunks(a):  # (B, Sp, F) -> (nch, chunk, B, F)
+        return jnp.moveaxis(a.reshape(B, nch, chunk, -1), 0, 2)
+
+    dtc, xcc, Bsc, Csc = map(to_chunks, (dt, xc, Bs, Cs))
+
+    def chunk_body(h, xs):
+        dt_c, x_c, B_c, C_c = xs  # (chunk, B, F)
+
+        def step(hh, ss):
+            dt_t, x_t, B_t, C_t = ss  # (B, di), (B, di), (B, st), (B, st)
+            dA = jnp.exp(dt_t[..., None] * A)  # (B, di, st)
+            hh = dA * hh + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bds,bs->bd", hh, C_t)
+            return hh, y
+
+        h, ys = jax.lax.scan(step, h, (dt_c, x_c, B_c, C_c))
+        return h, ys
+
+    h, ys = jax.lax.scan(
+        jax.checkpoint(chunk_body), h0, (dtc, xcc, Bsc, Csc)
+    )
+    y = jnp.moveaxis(ys.reshape(Sp, B, di), 0, 1)[:, :S]
+    return y, h
+
+
+def apply_mamba(
+    p,
+    x,
+    cfg: LMConfig,
+    conv_state: Optional[jax.Array] = None,
+    ssm_state: Optional[jax.Array] = None,
+):
+    """x: (B, S, d).  Returns (out, (new_conv_state, new_ssm_state)).
+
+    Pass states for incremental decode (S may be 1); states are None for
+    training/prefill (zero-initialized internally).
+    """
+    B, S, _ = x.shape
+    di, st, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt_ = cfg.dtype
+    xz = x @ p["in_proj"].astype(dt_)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    y_conv, new_conv = _causal_conv(
+        x_in, p["conv_w"], p["conv_b"],
+        state=conv_state,
+    )
+    xc = jax.nn.silu(y_conv).astype(jnp.float32)
+    proj = xc.astype(dt_) @ p["x_proj"].astype(dt_)
+    dt_low = proj[..., :dr].astype(jnp.float32)
+    B_ssm = proj[..., dr : dr + st].astype(jnp.float32)
+    C_ssm = proj[..., dr + st :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_low @ p["dt_w"].astype(jnp.float32) + p["dt_b"]
+    )
+    A = -jnp.exp(p["A_log"])  # (di, st)
+    h0 = (
+        ssm_state
+        if ssm_state is not None
+        else jnp.zeros((B, di, st), jnp.float32)
+    )
+    y, h = _selective_scan(dt, B_ssm, C_ssm, xc, A, h0, cfg.scan_chunk)
+    y = y + p["D"] * xc
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+    return out, (new_conv, h)

@@ -1,0 +1,150 @@
+"""Minimal functional parameter system used across the framework.
+
+Parameters are plain pytrees (nested dicts) of jnp arrays.  Every model
+exposes ``param_specs(cfg) -> pytree[ParamSpec]`` describing shapes, dtypes,
+initializers and *logical sharding axes*, and ``apply(params, ...)``.
+``init_params`` materializes a spec tree; ``specs_to_shardings`` maps logical
+axes to a mesh via user-supplied rules (MaxText-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/init/logical-axes description of one parameter."""
+
+    shape: tuple
+    dtype: Any = jnp.float32
+    logical_axes: tuple = ()
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | uniform_phase | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.logical_axes and len(self.logical_axes) != len(self.shape):
+            raise ValueError(
+                f"logical_axes {self.logical_axes} rank != shape {self.shape}"
+            )
+
+
+def _initialize(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "uniform_phase":  # phases in [0, 2pi) — DONN layers
+        return jax.random.uniform(
+            key, spec.shape, jnp.float32, 0.0, 2.0 * math.pi
+        ).astype(spec.dtype) * spec.scale
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(
+            spec.dtype
+        )
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(
+            spec.dtype
+        )
+    if spec.init == "fan_in":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(
+            spec.dtype
+        )
+    if spec.init == "s4d_a_log":  # mamba A_log: log(1..state) per channel row
+        state = spec.shape[-1]
+        row = jnp.log(jnp.arange(1, state + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(row, spec.shape).astype(spec.dtype)
+    if spec.init == "rglru_lambda":  # a = sigmoid(L) uniform in [0.9, 0.999]
+        a = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(a / (1.0 - a)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a ParamSpec pytree into concrete arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_initialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree matching a spec tree (for .lower / dry-runs)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def logical_to_pspec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Mapping[str, Any],
+) -> P:
+    """Map logical axis names to mesh axes via rules. None -> replicated dim."""
+    out = []
+    for name in logical_axes:
+        if name is None:
+            out.append(None)
+        else:
+            out.append(rules.get(name))
+    # trim trailing Nones for a tidy spec
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def specs_to_pspecs(specs, rules: Mapping[str, Any]):
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.logical_axes or (None,) * len(s.shape), rules),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def specs_to_shardings(specs, rules: Mapping[str, Any], mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_pspec(s.logical_axes or (None,) * len(s.shape), rules)
+        ),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    n = 0
+    for x in leaves:
+        if isinstance(x, ParamSpec):
+            n += math.prod(x.shape)
+        else:
+            n += x.size
+    return n
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    n = 0
+    for x in leaves:
+        if isinstance(x, ParamSpec):
+            n += math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+        else:
+            n += x.size * x.dtype.itemsize
+    return n
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamW, SGD, clip_by_global_norm, global_norm
+from repro.optim.schedules import constant, step_decay, warmup_cosine
+
+__all__ = [
+    "AdamW",
+    "SGD",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "step_decay",
+    "warmup_cosine",
+]

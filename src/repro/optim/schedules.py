@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac*peak."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1.0) / max(warmup_steps, 1))
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(math.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+def step_decay(lr: float, decay: float, every: int):
+    def fn(step):
+        k = jnp.floor(jnp.asarray(step, jnp.float32) / every)
+        return jnp.asarray(lr, jnp.float32) * (decay**k)
+
+    return fn

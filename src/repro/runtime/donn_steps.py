@@ -1,0 +1,167 @@
+"""pjit train step for the paper's DONN workloads (beyond-paper distribution).
+
+The paper trains on a single GPU (multi-GPU is named as future work, §6);
+here DONN training is data-parallel across the full production mesh — the
+batch shards over every mesh axis, phase parameters replicate (they are
+tiny: depth x n^2), and gradients all-reduce.  Spatial (field) model-
+parallelism via a pencil-decomposed FFT is implemented separately in
+`repro.runtime.pencil_fft` and evaluated in the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import DONNConfig
+from repro.core.models import build_model
+from repro.core.train_utils import bce_segmentation_loss, mse_softmax_loss
+from repro.nn import ParamSpec, is_spec
+from repro.optim import AdamW
+from repro.optim.adamw import AdamWState
+from repro.runtime import sharding as shd
+
+DONN_RULES = {**shd.DEFAULT_RULES, "batch": ("pod", "data", "model")}
+
+
+def donn_state_specs(cfg: DONNConfig):
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+
+    def opt_spec(s):
+        return ParamSpec(s.shape, jnp.float32, s.logical_axes, init="zeros")
+
+    return {
+        "params": pspecs,
+        "mu": jax.tree.map(opt_spec, pspecs, is_leaf=is_spec),
+        "nu": jax.tree.map(opt_spec, pspecs, is_leaf=is_spec),
+        "step": ParamSpec((), jnp.int32, (), init="zeros"),
+    }
+
+
+def make_donn_train_step(cfg: DONNConfig, optimizer: AdamW):
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        if cfg.segmentation:
+            inten = model.apply(params, batch["images"], train=True)
+            return bce_segmentation_loss(inten, batch["masks"])
+        logits = model.apply(params, batch["images"])
+        return mse_softmax_loss(logits, batch["labels"], cfg.num_classes)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_p, new_opt = optimizer.update(
+            grads, AdamWState(state["mu"], state["nu"]),
+            state["params"], state["step"],
+        )
+        return (
+            {"params": new_p, "mu": new_opt.mu, "nu": new_opt.nu,
+             "step": state["step"] + 1},
+            {"loss": loss},
+        )
+
+    return step
+
+
+def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
+                                     donate: bool = True,
+                                     global_batch: int | None = None):
+    """Optimized DONN training: shard_map data parallelism.
+
+    GSPMD cannot partition the FFT HLO even over pure batch dims — the
+    auto-sharded (pjit) step all-gathers the whole global field for every
+    FFT2/iFFT2 (see EXPERIMENTS.md §Perf).  Under shard_map each device
+    runs the *entire* optical forward/backward on its local batch shard
+    (local FFTs), and only the (tiny, phase-sized) gradients are psum'd —
+    the textbook DP layout for a small-parameter model.
+    """
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    optimizer = optimizer or AdamW(lr=0.01)
+    sspecs = donn_state_specs(cfg)
+    s_shard = shd.tree_shardings(sspecs, mesh, {})  # params replicated
+    dp_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    if global_batch is not None:  # drop axes until the batch divides
+        import math as _math
+
+        while dp_axes and global_batch % _math.prod(
+            mesh.shape[a] for a in dp_axes
+        ) != 0:
+            dp_axes = dp_axes[:-1]
+        if not dp_axes:
+            raise ValueError(f"batch {global_batch} unshardable on {mesh}")
+
+    def local_step(state, batch):
+        def loss_fn(params, b):
+            # reuse the single-device loss from make_donn_train_step
+            from repro.core.models import build_model
+            from repro.core.train_utils import (
+                bce_segmentation_loss, mse_softmax_loss,
+            )
+
+            model = build_model(cfg)
+            if cfg.segmentation:
+                inten = model.apply(params, b["images"], train=True)
+                return bce_segmentation_loss(inten, b["masks"])
+            logits = model.apply(params, b["images"])
+            return mse_softmax_loss(logits, b["labels"], cfg.num_classes)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        loss = jax.lax.pmean(loss, dp_axes)
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, dp_axes), grads)
+        new_p, new_opt = optimizer.update(
+            grads, AdamWState(state["mu"], state["nu"]),
+            state["params"], state["step"],
+        )
+        return (
+            {"params": new_p, "mu": new_opt.mu, "nu": new_opt.nu,
+             "step": state["step"] + 1},
+            {"loss": loss},
+        )
+
+    batch_spec = P(dp_axes)
+    if cfg.segmentation:
+        b_specs = {"images": batch_spec, "masks": batch_spec}
+    elif cfg.channels > 1:
+        b_specs = {"images": batch_spec, "labels": batch_spec}
+    else:
+        b_specs = {"images": batch_spec, "labels": batch_spec}
+    state_specs_sm = jax.tree.map(lambda _: P(), sspecs)
+    fn = jax.jit(
+        jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs_sm, b_specs),
+            out_specs=(state_specs_sm, {"loss": P()}),
+            check_vma=False,
+        ),
+        donate_argnums=(0,) if donate else (),
+    )
+    b_shard = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), b_specs
+    )
+    return fn, s_shard, b_shard, sspecs
+
+
+def compile_donn_train_step(cfg: DONNConfig, mesh, optimizer=None,
+                            donate: bool = True,
+                            global_batch: int | None = None):
+    optimizer = optimizer or AdamW(lr=0.01)
+    sspecs = donn_state_specs(cfg)
+    s_shard = shd.tree_shardings(sspecs, mesh, DONN_RULES)
+    bs = lambda ndim: shd.batch_sharding(mesh, ndim, DONN_RULES,
+                                         batch_size=global_batch)
+    if cfg.segmentation:
+        b_shard = {"images": bs(3), "masks": bs(3)}
+    elif cfg.channels > 1:
+        b_shard = {"images": bs(4), "labels": bs(1)}
+    else:
+        b_shard = {"images": bs(3), "labels": bs(1)}
+    fn = jax.jit(
+        make_donn_train_step(cfg, optimizer),
+        in_shardings=(s_shard, b_shard),
+        out_shardings=(s_shard, {"loss": shd.scalar_sharding(mesh)}),
+        donate_argnums=(0,) if donate else (),
+    )
+    return fn, s_shard, b_shard, sspecs

@@ -1,0 +1,427 @@
+"""Trip-count-aware cost analysis over compiled (post-SPMD) HLO text.
+
+Why: ``compiled.cost_analysis()`` does NOT multiply while-loop bodies by
+their trip counts, so for scan-over-layers models it reports ~one layer of
+FLOPs.  This module re-derives FLOPs / HBM bytes / collective bytes from
+``compiled.as_text()`` with proper loop accounting:
+
+1. parse every computation and its ops (dtype, shape, opcode, attrs);
+2. walk the call graph from ENTRY, accumulating execution multipliers —
+   while bodies multiply by the trip count recovered from the loop-bound
+   ``constant(N)`` in their condition computation; fusion/call/reduce
+   recurse with multiplier x1;
+3. FLOPs: dot = 2*prod(out)*K (K from lhs contracting dims); elementwise
+   arithmetic = prod(out); reduce = prod(in);
+4. HBM bytes: operands+outputs of ops at fusion boundaries only (ops inside
+   fused computations are compute-counted but not byte-counted);
+5. collective bytes per device with ring-transfer factors:
+   all-gather (g-1)/g * out, all-reduce 2*(g-1)/g * out,
+   reduce-scatter (g-1)*out, all-to-all (g-1)/g * out, permute = out.
+
+Validated against compiled.cost_analysis() on loop-free programs
+(tests/test_hlo_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "log-plus-one", "exponential-minus-one", "tanh",
+    "rsqrt", "sqrt", "power", "negate", "abs", "floor", "ceil", "cosine",
+    "sine", "logistic", "remainder", "atan2", "cbrt", "erf", "sign",
+    "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "clamp", "select",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+_SKIP_BYTES = {
+    "parameter", "tuple", "get-tuple-element", "constant", "while",
+    "conditional", "bitcast", "bitcast-convert", "partition-id",
+    "replica-id", "after-all", "iota",
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[^\s=]+)\s*=\s*"
+    r"(?P<type>\([^()]*\)|[\w]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<opcode>[\w-]+)\((?P<rest>.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[^\s(]+)\s+\(.*->")
+_SHAPE_RE = re.compile(r"^(?P<dtype>\w+)\[(?P<dims>[\d,]*)\]")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    dtype: str
+    shape: tuple
+    opcode: str
+    rest: str  # operands + attributes
+
+    @property
+    def nbytes(self) -> int:
+        if self.dtype is None:
+            return 0
+        return math.prod(self.shape) * _DTYPE_BYTES.get(self.dtype, 4)
+
+    @property
+    def nelems(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symtab: Dict[str, Op]
+
+
+def _parse_type(t: str):
+    m = _SHAPE_RE.match(t)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group("dims").split(",") if d)
+    return m.group("dtype"), dims
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group("name").lstrip("%")
+                cur = Computation(name, [], {})
+                if line.startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        dtype, shape = _parse_type(m.group("type"))
+        op = Op(m.group("name"), dtype, shape, m.group("opcode"), m.group("rest"))
+        cur.ops.append(op)
+        cur.symtab[op.name] = op
+    if cur is not None:
+        comps[cur.name] = cur
+    comps["__entry__"] = comps[entry]  # alias
+    return comps
+
+
+def _const_value(op: Op) -> Optional[int]:
+    m = re.match(r"(-?\d+)\)", op.rest)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the constant operand of the root comparison.
+
+    The condition computation's root is either a `compare(iv, N)` or a
+    fusion wrapping one; follow the root's operands to a constant.  (A
+    max-over-all-constants heuristic misfires on XLA's "wide" loops whose
+    conditions carry unrelated shape constants.)
+    """
+    if not cond.ops:
+        return 1
+    root = cond.ops[-1]
+    candidates = []
+    # direct operands of the root that are constants
+    for name in _operand_names(root.rest):
+        sym = cond.symtab.get(name)
+        if sym is not None and sym.opcode == "constant":
+            v = _const_value(sym)
+            if v is not None and v > 0:
+                candidates.append(v)
+    if not candidates and root.opcode == "fusion":
+        called = re.search(r"calls=%?([\w.\-]+)", root.rest)
+        # fused compare: the constant is still a fusion operand (param)
+        for name in _operand_names(root.rest):
+            sym = cond.symtab.get(name)
+            if sym is not None and sym.opcode == "constant":
+                v = _const_value(sym)
+                if v is not None and v > 0:
+                    candidates.append(v)
+    if candidates:
+        return min(candidates)  # compare bound, not stray shape constants
+    consts = [
+        v for op in cond.ops if op.opcode == "constant"
+        for v in [_const_value(op)] if v is not None and v > 0
+    ]
+    return max(consts) if consts else 1
+
+
+_CALL_ATTRS = re.compile(
+    r"(?:calls=|to_apply=|body=)%?([\w.\-]+)|condition=%?([\w.\-]+)"
+)
+
+
+def _multipliers(comps: Dict[str, Computation]):
+    """(comp -> exec multiplier, comp -> reached_via_fusion flag)."""
+    mult: Dict[str, float] = {}
+    fused: Dict[str, bool] = {}
+    entry = comps["__entry__"].name
+
+    def visit(cname: str, m: float, via_fusion: bool):
+        mult[cname] = mult.get(cname, 0.0) + m
+        fused[cname] = fused.get(cname, True) and via_fusion
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = _trip_count(comps[cond.group(1)]) if cond else 1
+                if body:
+                    visit(body.group(1), m * trips, via_fusion)
+                if cond:
+                    visit(cond.group(1), m * trips, via_fusion)
+            elif op.opcode in ("fusion",):
+                c = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if c:
+                    visit(c.group(1), m, True)
+            elif op.opcode in ("call", "custom-call", "async-start"):
+                c = re.search(r"(?:calls|called_computation)=%?([\w.\-]+)", op.rest)
+                if c:
+                    visit(c.group(1), m, via_fusion)
+            elif op.opcode == "conditional":
+                for c in re.findall(r"%([\w.\-]+)", op.rest):
+                    if c in comps:
+                        visit(c, m, via_fusion)
+            # reduce/scatter/sort to_apply: scalar combiners — skipped.
+
+    visit(entry, 1.0, False)
+    fused[entry] = False
+    return mult, fused
+
+
+def _operand_names(rest: str) -> list:
+    # operands are before the first "), " attr separator
+    depth, out, cur = 0, [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        cur.append(ch)
+    head = "".join(cur)
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    ops = _operand_names(op.rest)
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if ops and m and ops[0] in comp.symtab:
+        lhs = comp.symtab[ops[0]]
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs.shape[int(d)]
+    return 2.0 * op.nelems * k
+
+
+def _group_size(op: Op, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", op.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_COLL_FACTOR = {
+    "all-gather": lambda b, g: b * (g - 1) / g,
+    "all-gather-start": lambda b, g: b * (g - 1) / g,
+    "all-reduce": lambda b, g: 2.0 * b * (g - 1) / g,
+    "all-reduce-start": lambda b, g: 2.0 * b * (g - 1) / g,
+    "reduce-scatter": lambda b, g: b * (g - 1),
+    "all-to-all": lambda b, g: b * (g - 1) / g,
+    "collective-permute": lambda b, g: float(b),
+    "collective-permute-start": lambda b, g: float(b),
+}
+
+
+def _op_bytes(op: Op, comp: Computation, comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one boundary op, modelling in-place slice/update.
+
+    dynamic-update-slice runs in place on TPU (traffic ~ 2x the window);
+    dynamic-slice reads only the window.  Both frequently live *inside*
+    fusions, so for fusion ops we inspect the fused computation: parameters
+    feeding a dynamic-slice are charged at window size, parameters aliased
+    by a dynamic-update-slice are charged ~0 (the in-place buffer), and a
+    DUS at the root suppresses the output charge.
+    """
+    oc = op.opcode
+    if oc == "dynamic-update-slice":
+        names = _operand_names(op.rest)
+        upd = comp.symtab.get(names[1]) if len(names) > 1 else None
+        return 2.0 * (upd.nbytes if upd is not None else 0)
+    if oc == "dynamic-slice":
+        return 2.0 * op.nbytes
+    if oc == "convert":
+        # XLA:CPU materializes bf16<->f32 casts around dots that TPU
+        # performs natively in the MXU path; exclude this artifact traffic.
+        return 0.0
+    if oc == "fusion":
+        called = re.search(r"calls=%?([\w.\-]+)", op.rest)
+        fc = comps.get(called.group(1)) if called else None
+        if fc is not None:
+            body_ops = [
+                o for o in fc.ops
+                if o.opcode not in ("parameter", "constant")
+            ]
+            if body_ops and all(
+                o.opcode in _FORWARDING for o in body_ops
+            ):
+                return 0.0  # pure cast/layout fusion: native on TPU
+            ds_params, dus_params, dus_update_bytes, root_is_dus = (
+                _fusion_slice_info(fc)
+            )
+            total = 0.0
+            names = _operand_names(op.rest)
+            for i, name in enumerate(names):
+                sym = comp.symtab.get(name)
+                if sym is None:
+                    continue
+                if i in dus_params:
+                    continue  # aliased in-place buffer
+                if i in ds_params:
+                    total += ds_params[i]  # window-sized read
+                else:
+                    total += sym.nbytes
+            total += dus_update_bytes * 2.0
+            if not root_is_dus:
+                total += op.nbytes
+            return total
+    total = float(op.nbytes)
+    for name in _operand_names(op.rest):
+        sym = comp.symtab.get(name)
+        if sym is not None:
+            total += sym.nbytes
+    return total
+
+
+_FORWARDING = {"copy", "bitcast", "bitcast-convert", "transpose", "reshape",
+               "convert"}
+
+
+def _fusion_slice_info(fc: Computation):
+    """(param_idx -> window bytes for DS, set of DUS-aliased param idxs,
+    total DUS update bytes, root-is-DUS flag) for a fused computation.
+
+    Chains of trivial forwarding ops (copy/bitcast/transpose/...) between a
+    parameter and the slice/update op are traced through, since TPU layout
+    assignment performs these in place on the donated buffer.
+    """
+    param_idx = {}
+    for o in fc.ops:
+        if o.opcode == "parameter":
+            # _OP_RE consumed the opening paren: rest looks like "1), ..."
+            mnum = re.match(r"(\d+)\)", o.rest)
+            if mnum:
+                param_idx[o.name] = int(mnum.group(1))
+
+    def resolve(name, depth=0):
+        while depth < 8:
+            o = fc.symtab.get(name)
+            if o is None or o.opcode not in _FORWARDING:
+                return name
+            names = _operand_names(o.rest)
+            if not names:
+                return name
+            name = names[0]
+            depth += 1
+        return name
+
+    ds_params: Dict[int, float] = {}
+    dus_params = set()
+    dus_update_bytes = 0.0
+    dus_names = set()
+    for o in fc.ops:
+        names = _operand_names(o.rest)
+        if o.opcode == "dynamic-slice" and names:
+            src = resolve(names[0])
+            if src in param_idx:
+                i = param_idx[src]
+                ds_params[i] = ds_params.get(i, 0.0) + 2.0 * o.nbytes
+        elif o.opcode == "dynamic-update-slice" and names:
+            src = resolve(names[0])
+            if src in param_idx:
+                dus_params.add(param_idx[src])
+            upd = fc.symtab.get(names[1]) if len(names) > 1 else None
+            if upd is not None:
+                dus_update_bytes += upd.nbytes
+            dus_names.add(o.name)
+    root = fc.ops[-1] if fc.ops else None
+    root_is_dus = root is not None and resolve(root.name) in dus_names
+    return ds_params, dus_params, dus_update_bytes, root_is_dus
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str, default_group: int = 1) -> HloCost:
+    comps = parse_hlo(text)
+    mult, fused = _multipliers(comps)
+    cost = HloCost()
+    for cname, m in mult.items():
+        if cname == "__entry__":
+            continue
+        comp = comps[cname]
+        in_fusion = fused.get(cname, False)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                f = _dot_flops(op, comp) * m
+                cost.flops += f
+                cost.dot_flops += f
+            elif oc in _ELEMENTWISE:
+                cost.flops += op.nelems * m
+                cost.elementwise_flops += op.nelems * m
+            elif oc == "reduce":
+                onames = _operand_names(op.rest)
+                if onames and onames[0] in comp.symtab:
+                    cost.flops += comp.symtab[onames[0]].nelems * m
+            if oc in _COLLECTIVES:
+                g = _group_size(op, default_group)
+                b = _COLL_FACTOR[oc](op.nbytes, max(g, 1))
+                cost.collective_bytes += b * m
+                key = oc.replace("-start", "")
+                cost.collective_breakdown[key] = (
+                    cost.collective_breakdown.get(key, 0.0) + b * m
+                )
+            # HBM bytes: fusion-boundary accounting
+            if not in_fusion and oc not in _SKIP_BYTES:
+                cost.bytes += _op_bytes(op, comp, comps) * m
+    return cost

@@ -1,0 +1,218 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Parameters and activations carry *logical* axis names (see nn.ParamSpec);
+rules map logical names to mesh axes.  ``resolve_pspec`` drops a mapping
+when the dim is not divisible by the mesh-axis extent (e.g. kv_heads=2 on a
+16-way model axis -> replicated), which keeps one rule set valid across all
+10 architectures.
+
+Default layout (DESIGN.md §8):
+  batch      -> (pod, data)   data parallel
+  embed      -> data          FSDP: params + optimizer states sharded
+  vocab/heads/kv_heads/mlp/expert -> model   TP / EP
+  field_w    -> model         DONN spatial model-parallel (pencil FFT)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn import ParamSpec, is_spec
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": "model",  # Megatron-style sequence parallelism: the residual
+    #                  stream between layers shards S over the TP axis, so
+    #                  saved layer-boundary activations are 1/TP the size;
+    #                  GSPMD inserts the AG/RS pair around each block.
+    "embed": ("data", "pod"),  # FSDP + ZeRO-across-pods: parameters and
+    #                  optimizer moments shard over data AND pod axes
+    #                  (32-way on the 512-chip mesh) — cross-pod traffic is
+    #                  the per-layer gather, compressible (optim.compression)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head": "model",  # head_dim fallback: shards KV caches when kv_heads
+    #                   is not divisible by the model axis (GQA/MQA archs)
+    "mlp": "model",
+    "expert": "model",
+    "channel": None,
+    "layers": None,
+    "field_h": None,
+    "field_w": "model",
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0  # axis not present in this mesh -> unmappable
+        size *= mesh.shape[a]
+    return size
+
+
+def _present(mesh: Mesh, axes):
+    """Filter an axis (or tuple) down to axes present in the mesh."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def resolve_pspec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, Any]] = None,
+) -> P:
+    """Map logical axes to mesh axes; drop non-divisible or duplicate uses.
+
+    A mesh axis is consumed at most once per array (first dim wins), so
+    fallback rules — e.g. kv_heads and head both mapping to "model" — give
+    "shard whichever dim divides, preferring the earlier one".
+    """
+    rules = rules or DEFAULT_RULES
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical_axes):
+        axes = _present(mesh, rules.get(name)) if name else None
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in flat):
+                axes = None
+        size = _axis_size(mesh, axes) if axes else 1
+        if axes is None or size <= 1 or dim % size != 0:
+            out.append(None)  # replicate: unmapped, non-divisible, or dup
+        else:
+            out.append(axes)
+            used.update((axes,) if isinstance(axes, str) else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_sharding(spec: ParamSpec, mesh: Mesh, rules=None) -> NamedSharding:
+    axes = spec.logical_axes or (None,) * len(spec.shape)
+    return NamedSharding(mesh, resolve_pspec(spec.shape, axes, mesh, rules))
+
+
+def tree_shardings(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: spec_sharding(s, mesh, rules), specs, is_leaf=is_spec
+    )
+
+
+def tree_pspecs(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: resolve_pspec(
+            s.shape, s.logical_axes or (None,) * len(s.shape), mesh, rules
+        ),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def batch_sharding(mesh: Mesh, ndim: int, rules=None,
+                   batch_size: Optional[int] = None) -> NamedSharding:
+    """Shard dim 0 (global batch) over the DP axes; rest replicated.
+
+    If ``batch_size`` is given, axes are dropped (right-to-left) until the
+    remaining product divides it (e.g. global_batch=1 -> replicated).
+    """
+    rules = rules or DEFAULT_RULES
+    axes = _present(mesh, rules.get("batch"))
+    if axes is None:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    flat = (axes,) if isinstance(axes, str) else tuple(axes)
+    if batch_size is not None:
+        while flat and batch_size % _axis_size(mesh, flat) != 0:
+            flat = flat[:-1]
+    if not flat:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    axes = flat if len(flat) > 1 else flat[0]
+    return NamedSharding(mesh, P(axes, *([None] * (ndim - 1))))
+
+
+def scalar_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# Activation sharding constraints.  Model code calls ``constrain(x, axes)``
+# with logical axis names; it is a no-op unless a mesh context is active
+# (set by the runtime step builders at trace time), so pure model code
+# stays mesh-agnostic and works on a single device.
+# ----------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_active_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules=None):
+    token = _ACTIVE.set((mesh, rules or DEFAULT_RULES))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]],
+              require: Optional[str] = None):
+    """Apply a logical-axis sharding constraint if it resolves.
+
+    - no mesh context (single-device tests): no-op;
+    - nothing maps: no-op (don't force replication);
+    - ``require=<name>``: apply only if that logical axis actually mapped —
+      used for all-or-nothing layouts (e.g. the EP-resident MoE constraints
+      are wrong when n_experts < TP degree).
+    """
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_pspec(x.shape, logical_axes, mesh, rules)
+    padded = tuple(spec) + (None,) * (len(logical_axes) - len(spec))
+    if all(s is None for s in padded):
+        return x
+    if require is not None:
+        idx = list(logical_axes).index(require)
+        if padded[idx] is None:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def abstract_like(specs):
+    """ParamSpec tree -> ShapeDtypeStruct tree (dry-run stand-ins)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def sharded_zeros(specs, mesh: Mesh, rules=None):
+    """Materialize a zeroed, sharded pytree from specs (for real runs)."""
+    def mk(s):
+        sh = spec_sharding(s, mesh, rules)
+        return jax.make_array_from_callback(
+            s.shape, sh, lambda idx: np.zeros(
+                tuple(len(range(*i.indices(d))) for i, d in zip(idx, s.shape)),
+                s.dtype,
+            )
+        )
+    return jax.tree.map(mk, specs, is_leaf=is_spec)

@@ -1,0 +1,252 @@
+"""pjit train / prefill / decode steps shared by the launcher and dry-run.
+
+``TrainState`` is a plain dict {params, mu, nu, step}; optimizer states
+reuse the parameter ParamSpecs so ZeRO-style optimizer sharding follows the
+same logical-axis rules (FSDP over "data", and over "pod" too when the rule
+maps batch across pods).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models.config import LMConfig
+from repro.nn import ParamSpec, is_spec
+from repro.optim import AdamW
+from repro.runtime import sharding as shd
+
+
+# ----------------------------------------------------------------- specs
+def train_state_specs(cfg: LMConfig, state_dtype=jnp.float32,
+                      param_dtype=None):
+    pspecs = lm.param_specs(cfg)
+    if param_dtype is not None:  # e.g. bf16 params for memory-bound cells
+        pspecs = jax.tree.map(
+            lambda s: ParamSpec(s.shape, param_dtype, s.logical_axes,
+                                init=s.init, scale=s.scale),
+            pspecs, is_leaf=is_spec,
+        )
+
+    def opt_spec(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, state_dtype, s.logical_axes, init="zeros")
+
+    return {
+        "params": pspecs,
+        "mu": jax.tree.map(opt_spec, pspecs, is_leaf=is_spec),
+        "nu": jax.tree.map(opt_spec, pspecs, is_leaf=is_spec),
+        "step": ParamSpec((), jnp.int32, (), init="zeros"),
+    }
+
+
+def init_train_state(cfg: LMConfig, key, optimizer: AdamW):
+    params = lm.init(cfg, key)
+    opt = optimizer.init(params)
+    return {
+        "params": params, "mu": opt.mu, "nu": opt.nu,
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------- steps
+def make_train_step(
+    cfg: LMConfig,
+    optimizer: AdamW,
+    accum_steps: int = 1,
+    accum_dtype=jnp.float32,
+    cast_params_to=None,
+) -> Callable:
+    """(state, batch) -> (state, metrics). batch dim 0 = global batch.
+
+    ``cast_params_to=bf16`` casts the f32 master params once per step
+    before the forward, so FSDP weight all-gathers (and remat re-gathers)
+    move half the bytes; grads flow back through the cast to f32 masters.
+    """
+
+    def loss_fn(params, batch):
+        if cast_params_to is not None:
+            params = jax.tree.map(
+                lambda x: x.astype(cast_params_to)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x,
+                params,
+            )
+        return lm.lm_loss(params, batch, cfg)
+
+    def step(state, batch):
+        from repro.optim.adamw import AdamWState
+
+        if accum_steps > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                gsum = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32)).astype(a.dtype),
+                    gsum, g,
+                )
+                return (gsum, lsum + l), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state["params"]
+            )
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)), mb_batch
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_p, new_opt = optimizer.update(
+            grads, AdamWState(state["mu"], state["nu"]),
+            state["params"], state["step"],
+        )
+        new_state = {
+            "params": new_p, "mu": new_opt.mu, "nu": new_opt.nu,
+            "step": state["step"] + 1,
+        }
+        metrics = {"loss": loss, "grad_norm": _global_norm(grads)}
+        return new_state, metrics
+
+    return step
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def make_prefill_step(cfg: LMConfig) -> Callable:
+    def prefill(params, batch):
+        vision = batch.get("vision")
+        return lm.logits_fn(params, batch["tokens"], cfg, vision)
+
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig) -> Callable:
+    def decode(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg)
+
+    return decode
+
+
+# ----------------------------------------------------- jit compilation
+def compile_train_step(
+    cfg: LMConfig,
+    mesh: Mesh,
+    batch_specs: dict,
+    optimizer: Optional[AdamW] = None,
+    rules=None,
+    accum_steps: int = 1,
+    donate: bool = True,
+    state_dtype=jnp.float32,
+    param_dtype=None,
+    accum_dtype=jnp.float32,
+    cast_params_to=None,
+):
+    """Returns (jitted_fn, state_shardings, batch_shardings, state_specs)."""
+    optimizer = optimizer or AdamW(lr=1e-4, grad_clip_norm=1.0,
+                                   state_dtype=state_dtype)
+    sspecs = train_state_specs(cfg, state_dtype=state_dtype,
+                               param_dtype=param_dtype)
+    s_shard = shd.tree_shardings(sspecs, mesh, rules)
+    b_shard = jax.tree.map(
+        lambda s: shd.batch_sharding(mesh, len(s.shape), rules,
+                                     batch_size=s.shape[0]), batch_specs
+    )
+    metrics_shard = {
+        "loss": shd.scalar_sharding(mesh),
+        "grad_norm": shd.scalar_sharding(mesh),
+    }
+    base = make_train_step(cfg, optimizer, accum_steps, accum_dtype,
+                           cast_params_to)
+
+    def with_ctx(state, batch):
+        with shd.activation_sharding(mesh, rules):
+            return base(state, batch)
+
+    fn = jax.jit(
+        with_ctx,
+        in_shardings=(s_shard, b_shard),
+        out_shardings=(s_shard, metrics_shard),
+        donate_argnums=(0,) if donate else (),
+    )
+    return fn, s_shard, b_shard, sspecs
+
+
+def serving_param_specs(cfg: LMConfig, param_dtype=None):
+    """Inference params (no masters needed): optionally bf16."""
+    pspecs = lm.param_specs(cfg)
+    if param_dtype is not None:
+        pspecs = jax.tree.map(
+            lambda s: ParamSpec(s.shape, param_dtype, s.logical_axes,
+                                init=s.init, scale=s.scale),
+            pspecs, is_leaf=is_spec,
+        )
+    return pspecs
+
+
+def compile_prefill_step(cfg: LMConfig, mesh: Mesh, batch_specs, rules=None,
+                         param_dtype=None):
+    pspecs = serving_param_specs(cfg, param_dtype)
+    p_shard = shd.tree_shardings(pspecs, mesh, rules)
+    b_shard = jax.tree.map(
+        lambda s: shd.batch_sharding(mesh, len(s.shape), rules,
+                                     batch_size=s.shape[0]), batch_specs
+    )
+    b0 = next(iter(batch_specs.values())).shape[0]
+    logits_shard = NamedSharding(
+        mesh, shd.resolve_pspec((b0, 1, cfg.vocab),
+                                ("batch", None, "vocab"), mesh, rules)
+    )
+    base = make_prefill_step(cfg)
+
+    def with_ctx(params, batch):
+        with shd.activation_sharding(mesh, rules):
+            return base(params, batch)
+
+    fn = jax.jit(
+        with_ctx,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=logits_shard,
+    )
+    return fn, p_shard, b_shard, pspecs
+
+
+def compile_decode_step(
+    cfg: LMConfig, mesh: Mesh, batch: int, cache_len: int, rules=None,
+    donate: bool = True,
+):
+    pspecs = lm.param_specs(cfg)
+    cspecs = lm.cache_specs(cfg, batch, cache_len)
+    p_shard = shd.tree_shardings(pspecs, mesh, rules)
+    c_shard = shd.tree_shardings(cspecs, mesh, rules)
+    tok_shard = shd.batch_sharding(mesh, 2, rules, batch_size=batch)
+    pos_shard = shd.scalar_sharding(mesh)
+    logits_shard = NamedSharding(
+        mesh, shd.resolve_pspec((batch, 1, cfg.vocab),
+                                ("batch", None, "vocab"), mesh, rules)
+    )
+    base = make_decode_step(cfg)
+
+    def with_ctx(params, cache, tokens, pos):
+        with shd.activation_sharding(mesh, rules):
+            return base(params, cache, tokens, pos)
+
+    fn = jax.jit(
+        with_ctx,
+        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,) if donate else (),
+    )
+    return fn, p_shard, c_shard, cspecs

@@ -1,0 +1,25 @@
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, device_count: int = 8, timeout: int = 560):
+    """Run python code in a fresh process with N host platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={device_count}"
+    env["PYTHONPATH"] = str(SRC)
+    return subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+
+
+@pytest.fixture(scope="session")
+def repo_root():
+    return REPO

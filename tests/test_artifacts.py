@@ -1,0 +1,76 @@
+"""Validate dry-run / perf artifact schemas (skipped when absent).
+
+These guard the roofline pipeline: every 'ok' cell must carry the three
+terms, memory accounting, and a positive roofline fraction; skips must be
+the documented long_500k full-attention exclusions.
+"""
+import json
+import pathlib
+
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+REQUIRED = [
+    "arch", "shape", "kind", "mesh", "status",
+]
+OK_REQUIRED = [
+    "chips", "n_params", "model_flops", "hlo_flops_per_dev",
+    "hlo_bytes_per_dev", "collective_bytes_per_dev", "terms", "dominant",
+    "roofline_fraction", "memory",
+]
+
+
+def _records():
+    if not ART.exists():
+        pytest.skip("no dry-run artifacts present")
+    recs = [json.loads(f.read_text()) for f in sorted(ART.glob("*.json"))]
+    if not recs:
+        pytest.skip("no dry-run artifacts present")
+    return recs
+
+
+def test_schema():
+    for r in _records():
+        for k in REQUIRED:
+            assert k in r, (r.get("arch"), k)
+        if r["status"] == "ok":
+            for k in OK_REQUIRED:
+                assert k in r, (r["arch"], r["shape"], k)
+            t = r["terms"]
+            assert set(t) == {"compute_s", "memory_s", "collective_s"}
+            assert all(v >= 0 for v in t.values())
+            assert r["roofline_fraction"] >= 0
+            assert r["memory"]["per_device_bytes"] > 0
+
+
+def test_no_failures():
+    bad = [
+        (r["arch"], r["shape"], r["mesh"], r["status"][:60])
+        for r in _records()
+        if r["status"] != "ok" and not r["status"].startswith("SKIP")
+    ]
+    assert not bad, bad
+
+
+def test_skips_are_documented_long_context_exclusions():
+    for r in _records():
+        if str(r["status"]).startswith("SKIP"):
+            assert r["shape"] == "long_500k"
+            assert r["arch"] in {
+                "glm4-9b", "granite-8b", "qwen1.5-4b", "qwen2.5-14b",
+                "arctic-480b", "llama-3.2-vision-11b", "musicgen-medium",
+            }
+
+
+def test_both_meshes_present():
+    recs = _records()
+    pods = {r["mesh"] for r in recs}
+    assert pods == {"pod1-256", "pod2-512"}
+
+
+def test_moe_active_params_less_than_total():
+    for r in _records():
+        if r.get("status") == "ok" and r["arch"] in ("mixtral-8x7b",
+                                                     "arctic-480b"):
+            assert r["n_active_params"] < r["n_params"]

@@ -1,0 +1,124 @@
+"""Checkpoint store: roundtrip, atomic commit, GC, async, integrity."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+
+
+def _state(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(r.normal(size=(17, 5)), jnp.float32),
+                   "b": jnp.asarray(r.normal(size=(5,)), jnp.bfloat16)},
+        "mu": {"w": jnp.zeros((17, 5)), "b": jnp.zeros((5,))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+class TestRoundtrip:
+    def test_save_restore_identical(self, tmp_path):
+        s = _state()
+        ckpt.save(tmp_path, 7, s)
+        r = ckpt.restore(tmp_path, 7, s)
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+            assert a.dtype == b.dtype
+
+    def test_latest_pointer(self, tmp_path):
+        s = _state()
+        ckpt.save(tmp_path, 3, s)
+        ckpt.save(tmp_path, 9, s)
+        assert ckpt.latest_step(tmp_path) == 9
+
+    def test_chunked_large_leaf(self, tmp_path, monkeypatch):
+        import repro.checkpoint.store as store
+
+        monkeypatch.setattr(store, "CHUNK_BYTES", 256)
+        s = {"big": jnp.arange(1000, dtype=jnp.float32).reshape(100, 10)}
+        store.save(tmp_path, 1, s)
+        files = list((tmp_path / "step_00000001").glob("leaf_00000.c*.npy"))
+        assert len(files) > 1  # actually chunked
+        r = store.restore(tmp_path, 1, s)
+        np.testing.assert_array_equal(np.asarray(r["big"]), np.asarray(s["big"]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 50))
+    def test_random_pytrees(self, seed):
+        import tempfile
+
+        r = np.random.default_rng(seed)
+        tree = {
+            f"k{i}": jnp.asarray(r.normal(size=tuple(r.integers(1, 7, 2))),
+                                 jnp.float32)
+            for i in range(int(r.integers(1, 5)))
+        }
+        d = pathlib.Path(tempfile.mkdtemp()) / f"h{seed}"
+        ckpt.save(d, 0, tree)
+        back = ckpt.restore(d, 0, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDurability:
+    def test_gc_keeps_last_k(self, tmp_path):
+        s = _state()
+        for i in range(6):
+            ckpt.save(tmp_path, i, s, keep=2)
+        dirs = sorted(d.name for d in tmp_path.iterdir() if d.is_dir())
+        assert dirs == ["step_00000004", "step_00000005"]
+
+    def test_partial_tmp_dir_is_ignored(self, tmp_path):
+        s = _state()
+        ckpt.save(tmp_path, 1, s)
+        # simulate a crash mid-write of step 2
+        (tmp_path / "step_00000002.tmp").mkdir()
+        (tmp_path / "step_00000002.tmp" / "leaf_00000.c000.npy").write_bytes(
+            b"garbage")
+        assert ckpt.latest_step(tmp_path) == 1
+        r = ckpt.restore(tmp_path, 1, s)
+        assert int(r["step"]) == 7
+
+    def test_corruption_detected(self, tmp_path):
+        s = _state()
+        ckpt.save(tmp_path, 1, s)
+        d = tmp_path / "step_00000001"
+        # flip bytes in one chunk
+        f = sorted(d.glob("*.npy"))[0]
+        data = bytearray(f.read_bytes())
+        data[-4] ^= 0xFF
+        f.write_bytes(bytes(data))
+        with pytest.raises(IOError):
+            ckpt.restore(tmp_path, 1, s, verify=True)
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        s = _state()
+        ckpt.save(tmp_path, 1, s)
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path, 1, {"only": jnp.zeros(3)})
+
+
+class TestAsync:
+    def test_async_commit(self, tmp_path):
+        s = _state()
+        saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+        for i in range(3):
+            saver.save(i, s)
+        saver.wait()
+        assert ckpt.latest_step(tmp_path) == 2
+
+    def test_async_snapshot_consistency(self, tmp_path):
+        """Mutating state after save() must not affect the snapshot."""
+        s = {"w": jnp.ones((4,))}
+        saver = ckpt.AsyncCheckpointer(tmp_path)
+        saver.save(0, s)
+        s["w"] = s["w"] * 100  # rebind after snapshot
+        saver.wait()
+        r = ckpt.restore(tmp_path, 0, s)
+        np.testing.assert_array_equal(np.asarray(r["w"]), np.ones(4))

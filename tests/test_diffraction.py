@@ -1,0 +1,155 @@
+"""Physics-level tests of the scalar-diffraction kernels (paper §3.1)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import diffraction as df
+
+WL = 532e-9
+PX = 36e-6
+
+
+def _rand_field(n, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(
+        r.normal(size=(n, n)) + 1j * r.normal(size=(n, n)), jnp.complex64
+    )
+
+
+class TestEnergyConservation:
+    def test_rs_unitary_without_band_limit(self):
+        g = df.Grid(64, PX)
+        u = _rand_field(64)
+        v = df.propagate(u, g, 0.01, WL, df.RS, band_limit=False)
+        np.testing.assert_allclose(
+            float(jnp.sum(df.intensity(u))), float(jnp.sum(df.intensity(v))),
+            rtol=1e-4,
+        )
+
+    def test_fresnel_unitary(self):
+        g = df.Grid(64, PX)
+        u = _rand_field(64, 1)
+        v = df.propagate(u, g, 0.05, WL, df.FRESNEL, band_limit=False)
+        np.testing.assert_allclose(
+            float(jnp.sum(df.intensity(u))), float(jnp.sum(df.intensity(v))),
+            rtol=1e-4,
+        )
+
+    def test_band_limit_only_removes_energy(self):
+        g = df.Grid(64, PX)
+        u = _rand_field(64, 2)
+        v = df.propagate(u, g, 0.3, WL, df.RS, band_limit=True)
+        assert float(jnp.sum(df.intensity(v))) <= float(
+            jnp.sum(df.intensity(u))
+        ) * (1 + 1e-5)
+
+
+class TestComposition:
+    @pytest.mark.parametrize("method", [df.RS, df.FRESNEL])
+    def test_two_hops_equal_one(self, method):
+        g = df.Grid(48, PX)
+        u = _rand_field(48, 3)
+        z1, z2 = 0.013, 0.021
+        v2 = df.propagate(
+            df.propagate(u, g, z1, WL, method, band_limit=False),
+            g, z2, WL, method, band_limit=False,
+        )
+        v1 = df.propagate(u, g, z1 + z2, WL, method, band_limit=False)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_forward_backward_identity(self):
+        g = df.Grid(48, PX)
+        u = _rand_field(48, 4)
+        v = df.propagate(
+            df.propagate(u, g, 0.02, WL, df.RS, band_limit=False),
+            g, -0.02, WL, df.RS, band_limit=False,
+        )
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestGaussianBeamAnalytic:
+    def test_waist_expansion_matches_theory(self):
+        """w(z) = w0 sqrt(1 + (z/zR)^2) for a Gaussian beam."""
+        n, px = 256, 8e-6
+        g = df.Grid(n, px)
+        w0 = 120e-6
+        c = g.coords()
+        xx, yy = np.meshgrid(c, c, indexing="ij")
+        u0 = jnp.asarray(np.exp(-(xx**2 + yy**2) / w0**2), jnp.complex64)
+        zr = math.pi * w0**2 / WL
+        z = 1.5 * zr
+        uz = df.propagate(u0, g, z, WL, df.RS, band_limit=False)
+        inten = np.asarray(df.intensity(uz))
+        # I ~ exp(-2 r^2/w^2) => <x^2> = w^2/4 => w = 2 sqrt(<x^2>)
+        tot = inten.sum()
+        x2 = (inten * xx**2).sum() / tot
+        w_meas = 2.0 * math.sqrt(x2)
+        w_theory = w0 * math.sqrt(1 + (z / zr) ** 2)
+        assert abs(w_meas - w_theory) / w_theory < 0.05
+
+    def test_fresnel_matches_rs_in_paraxial_regime(self):
+        n, px = 128, 16e-6
+        g = df.Grid(n, px)
+        w0 = 200e-6
+        c = g.coords()
+        xx, yy = np.meshgrid(c, c, indexing="ij")
+        u0 = jnp.asarray(np.exp(-(xx**2 + yy**2) / w0**2), jnp.complex64)
+        z = 0.05
+        i_rs = np.asarray(df.intensity(df.propagate(u0, g, z, WL, df.RS)))
+        i_fr = np.asarray(df.intensity(df.propagate(u0, g, z, WL, df.FRESNEL)))
+        corr = np.corrcoef(i_rs.ravel(), i_fr.ravel())[0, 1]
+        assert corr > 0.999
+
+
+class TestLinearity:
+    @settings(max_examples=10, deadline=None)
+    @given(a=st.floats(-2, 2), b=st.floats(-2, 2))
+    def test_superposition(self, a, b):
+        g = df.Grid(32, PX)
+        u1, u2 = _rand_field(32, 5), _rand_field(32, 6)
+        p = lambda u: df.propagate(u, g, 0.02, WL, df.RS)
+        lhs = np.asarray(p(a * u1 + b * u2))
+        rhs = np.asarray(a * p(u1) + b * p(u2))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+class TestFraunhofer:
+    def test_far_field_of_slit_is_sinc(self):
+        n, px = 256, 10e-6
+        g = df.Grid(n, px)
+        slit_w = 20  # pixels
+        u = np.zeros((n, n), np.complex64)
+        u[:, n // 2 - slit_w // 2 : n // 2 + slit_w // 2] = 1.0
+        z = 2.0  # far field
+        far = df.fraunhofer(jnp.asarray(u), g, z, WL)
+        inten = np.asarray(df.intensity(far))
+        row = inten[n // 2]
+        # central maximum at center; first zeros at x = lambda z / slit width
+        assert row.argmax() == n // 2
+        fx = np.fft.fftshift(np.fft.fftfreq(n, d=px))
+        x = fx * WL * z
+        zero_x = WL * z / (slit_w * px)
+        iz = int(np.argmin(np.abs(x - zero_x)))
+        assert row[iz] < 0.01 * row[n // 2]
+
+
+class TestGradients:
+    def test_phase_gradients_flow(self):
+        g = df.Grid(32, PX)
+        u = _rand_field(32, 7)
+        h = jnp.asarray(df.transfer_function(g, 0.02, WL, df.RS))
+
+        def f(phi):
+            v = df.propagate_tf(u * jnp.exp(1j * phi.astype(jnp.complex64)), h)
+            return jnp.sum(df.intensity(v)[:8, :8])
+
+        grad = jax.grad(f)(jnp.zeros((32, 32), jnp.float32))
+        assert bool(jnp.all(jnp.isfinite(grad))) and float(
+            jnp.max(jnp.abs(grad))
+        ) > 0

@@ -1,0 +1,110 @@
+"""LightRidge-DSE: GBDT regressor + analytical-model exploration (paper §4)."""
+import numpy as np
+import pytest
+
+from repro.core.dse import (
+    GradientBoostingRegressor, LightRidgeDSE, rank_layouts,
+    sensitivity_analysis,
+)
+
+
+class TestGBDT:
+    def test_fits_nonlinear_function(self):
+        r = np.random.default_rng(0)
+        X = r.uniform(-2, 2, size=(200, 2))
+        y = np.sin(X[:, 0]) * X[:, 1] ** 2 + 0.05 * r.normal(size=200)
+        m = GradientBoostingRegressor(n_estimators=300, learning_rate=0.1,
+                                      max_depth=3)
+        m.fit(X, y)
+        pred = m.predict(X)
+        rmse = np.sqrt(np.mean((pred - y) ** 2))
+        assert rmse < 0.1
+
+    def test_generalizes(self):
+        r = np.random.default_rng(1)
+        X = r.uniform(-2, 2, size=(300, 2))
+        y = X[:, 0] ** 2 + X[:, 1]
+        m = GradientBoostingRegressor(n_estimators=200, learning_rate=0.1,
+                                      max_depth=3).fit(X[:200], y[:200])
+        pred = m.predict(X[200:])
+        rmse = np.sqrt(np.mean((pred - y[200:]) ** 2))
+        assert rmse < 0.25
+
+    def test_paper_hyperparameters_run(self):
+        """The paper's exact config (3500 trees, lr .2, depth 3) must work."""
+        r = np.random.default_rng(25)
+        X = r.uniform(0, 1, size=(121, 3))
+        y = np.cos(3 * X[:, 0]) + X[:, 1] * X[:, 2]
+        m = GradientBoostingRegressor(n_estimators=3500, learning_rate=0.2,
+                                      max_depth=3, random_state=25).fit(X, y)
+        assert np.sqrt(np.mean((m.predict(X) - y) ** 2)) < 0.05
+
+
+def _landscape(lam, d, D):
+    """Synthetic DONN accuracy landscape peaking where d/lam and the
+    Fresnel coupling hit sweet spots (mimics paper Fig. 5 structure)."""
+    a = np.exp(-((d / lam - 68) ** 2) / 400.0)
+    b = np.exp(-((d * d / (lam * D) - 0.008) ** 2) / 2e-5)
+    return float(np.clip(0.1 + 0.9 * a * b, 0, 1))
+
+
+class TestLightRidgeDSE:
+    def _grid(self, lam):
+        ds = np.linspace(10 * lam, 110 * lam, 11)
+        Ds = np.linspace(0.1, 0.6, 11)
+        pts, accs = [], []
+        for d in ds:
+            for D in Ds:
+                pts.append((lam, d, D))
+                accs.append(_landscape(lam, d, D))
+        return pts, accs
+
+    def test_transfer_to_new_wavelength(self):
+        """Train on 432nm+632nm grids, predict 532nm (paper Fig. 5 flow)."""
+        pts, accs = [], []
+        for lam in (432e-9, 632e-9):
+            p, a = self._grid(lam)
+            pts += p
+            accs += a
+        dse = LightRidgeDSE(n_estimators=300).fit(pts, accs)
+        lam = 532e-9
+        cand = [(d, D) for d in np.linspace(10 * lam, 110 * lam, 11)
+                for D in np.linspace(0.1, 0.6, 11)]
+        res = dse.explore(lam, cand, emulate=lambda p: _landscape(*p), top_k=2)
+        true_best = max(_landscape(lam, d, D) for d, D in cand)
+        assert res.verified_acc >= true_best - 0.05
+        assert res.speedup >= 50  # paper reports ~60x
+
+    def test_validity_range_refusal(self):
+        """Theory-violating extrapolation (visible->IR) must be refused."""
+        pts, accs = self._grid(432e-9)
+        p2, a2 = self._grid(632e-9)
+        dse = LightRidgeDSE(n_estimators=50).fit(pts + p2, accs + a2)
+        with pytest.raises(ValueError):
+            dse.predict([(10e-6, 36e-6, 0.3)])  # IR wavelength
+
+    def test_sensitivity_analysis_shape(self):
+        out = sensitivity_analysis(lambda p: _landscape(*p),
+                                   (532e-9, 36e-6, 0.3))
+        assert set(out) == {"wavelength", "unit_size", "distance"}
+        for rows in out.values():
+            assert len(rows) == 5
+        # unit size is the most sensitive parameter (paper Table 3)
+        def drop(name):
+            rows = dict(out[name])
+            return rows[0.0] - min(rows[-0.05], rows[0.05])
+        assert drop("unit_size") >= drop("distance") - 1e-9
+
+
+class TestShardingDSE:
+    def test_rank_layouts(self):
+        recs = [
+            {"name": "a", "terms": {"compute_s": 1.0, "memory_s": 5.0,
+                                    "collective_s": 2.0}},
+            {"name": "b", "terms": {"compute_s": 1.0, "memory_s": 2.0,
+                                    "collective_s": 1.5}},
+            {"name": "c", "terms": {"compute_s": 3.0, "memory_s": 3.0,
+                                    "collective_s": 0.1}},
+        ]
+        ranked = rank_layouts(recs)
+        assert [r["name"] for r in ranked] == ["b", "c", "a"]

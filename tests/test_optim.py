@@ -1,0 +1,118 @@
+"""Optimizer + schedules + gradient compression numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamW, SGD, constant, global_norm, warmup_cosine
+from repro.optim.adamw import AdamWState, clip_by_global_norm
+from repro.optim.compression import (
+    compression_ratio, dequantize_int8, ef_quantize, quantize_int8,
+)
+
+
+class TestAdamW:
+    def test_matches_numpy_reference(self):
+        lr, b1, b2, eps = 0.01, 0.9, 0.999, 1e-8
+        opt = AdamW(lr=lr, b1=b1, b2=b2, eps=eps)
+        r = np.random.default_rng(0)
+        p = {"w": jnp.asarray(r.normal(size=(5, 3)), jnp.float32)}
+        state = opt.init(p)
+        m = np.zeros((5, 3)); v = np.zeros((5, 3))
+        pn = np.asarray(p["w"]).copy()
+        for step in range(5):
+            g = r.normal(size=(5, 3)).astype(np.float32)
+            p, state = opt.update({"w": jnp.asarray(g)}, state, p,
+                                  jnp.asarray(step))
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** (step + 1))
+            vh = v / (1 - b2 ** (step + 1))
+            pn = pn - lr * mh / (np.sqrt(vh) + eps)
+        np.testing.assert_allclose(np.asarray(p["w"]), pn, rtol=1e-5, atol=1e-6)
+
+    def test_weight_decay_shrinks(self):
+        opt = AdamW(lr=0.1, weight_decay=0.5)
+        p = {"w": jnp.ones((4,))}
+        state = opt.init(p)
+        p2, _ = opt.update({"w": jnp.zeros((4,))}, state, p, jnp.asarray(0))
+        assert float(p2["w"][0]) < 1.0
+
+    def test_converges_on_quadratic(self):
+        opt = AdamW(lr=0.1)
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        state = opt.init(p)
+        for i in range(300):
+            g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+            p, state = opt.update(g, state, p, jnp.asarray(i))
+        assert float(jnp.max(jnp.abs(p["w"]))) < 1e-2
+
+    def test_bf16_state_dtype_halves_memory(self):
+        opt = AdamW(lr=0.1, state_dtype=jnp.bfloat16)
+        p = {"w": jnp.ones((8,), jnp.float32)}
+        st_ = opt.init(p)
+        assert st_.mu["w"].dtype == jnp.bfloat16
+
+    def test_grad_clip(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        c = clip_by_global_norm(g, 1.0)
+        assert abs(float(global_norm(c)) - 1.0) < 1e-5
+
+
+class TestSchedules:
+    def test_warmup_cosine_shape(self):
+        fn = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+        assert float(fn(0)) < 0.2
+        assert abs(float(fn(10)) - 1.0) < 0.02
+        assert float(fn(99)) < 0.2
+        assert float(fn(99)) >= 0.1 * 0.99
+
+    def test_constant(self):
+        assert float(constant(0.5)(123)) == 0.5
+
+
+class TestCompression:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 1e4))
+    def test_quantization_error_bound(self, seed, scale):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(scale * r.normal(size=(1000,)), jnp.float32)
+        q, s, n = quantize_int8(x)
+        deq = dequantize_int8(q, s, n, x.shape, jnp.float32)
+        # per-block error bounded by scale/2 = max|block|/254
+        err = np.abs(np.asarray(deq - x))
+        bound = np.asarray(s).max() * 0.5 + 1e-9
+        assert err.max() <= bound * 1.001
+
+    def test_compression_ratio_near_4x(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(100000,)),
+                        jnp.float32)
+        assert compression_ratio(x) > 3.5
+
+    def test_error_feedback_preserves_signal(self):
+        """Sum of dequantized transmissions + final error == sum of inputs."""
+        r = np.random.default_rng(1)
+        err = jnp.zeros((512,), jnp.float32)
+        xs = [jnp.asarray(r.normal(size=(512,)), jnp.float32) for _ in range(20)]
+        sent = jnp.zeros((512,), jnp.float32)
+        for x in xs:
+            q, s, n, err = ef_quantize(x, err)
+            sent = sent + dequantize_int8(q, s, n, x.shape, jnp.float32)
+        total = sum(xs)
+        np.testing.assert_allclose(np.asarray(sent + err), np.asarray(total),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ef_sgd_converges_like_exact(self):
+        """EF-compressed gradients converge on a quadratic ~ as exact SGD."""
+        w = jnp.asarray([4.0, -2.0, 1.0] * 100)
+        err = jnp.zeros_like(w)
+        w_exact = w
+        for _ in range(200):
+            g = 2 * w
+            q, s, n, err = ef_quantize(g, err)
+            g_hat = dequantize_int8(q, s, n, g.shape, jnp.float32)
+            w = w - 0.01 * g_hat
+            w_exact = w_exact - 0.01 * (2 * w_exact)
+        assert float(jnp.max(jnp.abs(w))) < 0.1
+        assert float(jnp.max(jnp.abs(w - w_exact))) < 0.05
