@@ -55,6 +55,20 @@ def main():
     row("fig9/complex_mm/lightridge_jnp", us2, f"speedup={us_b / us2:.1f}x")
     row("fig9/complex_mm/baseline", us_b, "per-sample numpy c128")
 
+    # fused phase+TF elementwise op (the scan-body site of the propagation
+    # engine): cos/sin rotation + amplitude complex-multiply in one pass
+    theta_h = jnp.asarray(np.angle(np.asarray(hj)).astype(np.float32))
+    amp_h = jnp.asarray(np.abs(np.asarray(hj)).astype(np.float32))
+    ptf = jax.jit(lambda a, b, t, m: kops.phase_tf_apply(a, b, t, m))
+    us3 = time_fn(ptf, ur, ui, theta_h, amp_h)
+    h_np = np.asarray(hj).astype(np.complex128)
+    us3_b = time_host_fn(
+        lambda: np.stack([u[i] * h_np for i in range(batch)])
+    )
+    row("fig9/phase_tf/lightridge_pallas_interpret", us3,
+        f"speedup={us3_b / us3:.1f}x(interpret-mode-on-CPU;wall-clock-meaningful-on-TPU-only)")
+    row("fig9/phase_tf/baseline", us3_b, "per-sample numpy c128 TF multiply")
+
 
 if __name__ == "__main__":
     main()

@@ -1,10 +1,19 @@
 """Shared benchmark utilities. Every benchmark prints CSV rows:
-``name,us_per_call,derived`` (derived = the paper-facing quantity)."""
+``name,us_per_call,derived`` (derived = the paper-facing quantity).
+
+Benchmarks that feed the perf trajectory additionally persist their rows
+as ``artifacts/bench/BENCH_<suite>.json`` via ``write_bench_json`` so
+tooling can diff numbers across PRs.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "bench"
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -31,3 +40,14 @@ def time_host_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_bench_json(suite: str, rows: list, meta: dict | None = None):
+    """Persist ``BENCH_<suite>.json``: {suite, meta, rows:[{name,us,derived}]}."""
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(
+        {"suite": suite, "meta": meta or {}, "rows": rows}, indent=2,
+    ))
+    print(f"# wrote {path}", flush=True)
+    return path

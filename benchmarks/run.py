@@ -19,6 +19,7 @@ def main() -> None:
         bench_dse,
         bench_energy,
         bench_kernel_breakdown,
+        bench_propagation_plan,
         bench_regularization,
         bench_rgb,
         bench_roofline,
@@ -31,6 +32,7 @@ def main() -> None:
     suites = [
         ("fig8_runtime", bench_runtime.main),
         ("fig9_kernel_breakdown", bench_kernel_breakdown.main),
+        ("propagation_plan", bench_propagation_plan.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),

@@ -41,7 +41,14 @@ class DONNConfig:
     layer_norm: bool = False  # train-time LN before detector (segmentation)
     # --- runtime ---
     use_pallas: bool = False  # Pallas kernels for modulation/readout
+    engine: str = "scan"  # "scan" (fused PropagationPlan) | "eager" (per-layer loop)
     input_size: int = 28  # native input image side (embedded/upsampled to n)
+
+    def __post_init__(self):
+        if self.engine not in ("scan", "eager"):
+            raise ValueError(
+                f"engine must be 'scan' or 'eager', got {self.engine!r}"
+            )
 
     def gap_distances(self) -> tuple:
         """depth+1 propagation gaps: source->L1, L_i->L_{i+1}, L_last->det."""

@@ -120,16 +120,41 @@ def propagate(
     return propagate_tf(u, h)
 
 
+def pad_field(u: jax.Array, n: int) -> jax.Array:
+    """Center-embed an (..., n, n) field into the 2x zero-padded grid."""
+    widths = [(0, 0)] * (u.ndim - 2) + [
+        (n // 2, n - n // 2), (n // 2, n - n // 2)
+    ]
+    return jnp.pad(u, widths)
+
+
+def crop_field(u: jax.Array, n: int) -> jax.Array:
+    """Inverse of ``pad_field``: recover the central (..., n, n) window."""
+    lo = n // 2
+    return u[..., lo : lo + n, lo : lo + n]
+
+
 def _propagate_padded(u, grid, z, wavelength, method, band_limit):
     n = grid.n
     h = jnp.asarray(
         transfer_function(grid, z, wavelength, method, band_limit, pad=True)
     )
-    pad_widths = [(0, 0)] * (u.ndim - 2) + [(n // 2, n - n // 2), (n // 2, n - n // 2)]
-    up = jnp.pad(u, pad_widths)
-    out = propagate_tf(up, h)
-    lo = n // 2
-    return out[..., lo : lo + n, lo : lo + n]
+    return crop_field(propagate_tf(pad_field(u, n), h), n)
+
+
+def fraunhofer_quad(grid: Grid, z: float, wavelength: float) -> np.ndarray:
+    """Far-field output-plane factor of Eq. 4 (quadratic phase + scaling).
+
+    Shared by the eager path (``fraunhofer``) and the propagation-plan
+    cache so the two can never diverge.
+    """
+    n = grid.n
+    k = 2.0 * math.pi / wavelength
+    x = np.fft.fftshift(np.fft.fftfreq(n, d=grid.pixel_size)) * wavelength * z
+    xx, yy = np.meshgrid(x, x, indexing="ij")
+    quad = np.exp(1j * k * z) * np.exp(1j * k / (2.0 * z) * (xx**2 + yy**2))
+    scale = grid.pixel_size**2 / (1j * wavelength * z)
+    return (quad * scale).astype(np.complex64)
 
 
 def fraunhofer(
@@ -141,15 +166,8 @@ def fraunhofer(
     lambda*z/(N*dx); the quadratic output phase and 1/(j lambda z) scaling are
     applied so intensities are physical.
     """
-    n = grid.n
-    k = 2.0 * math.pi / wavelength
-    x = np.fft.fftshift(np.fft.fftfreq(n, d=grid.pixel_size)) * wavelength * z
-    xx, yy = np.meshgrid(x, x, indexing="ij")
-    quad = np.exp(1j * k * z) * np.exp(1j * k / (2.0 * z) * (xx**2 + yy**2))
-    scale = grid.pixel_size**2 / (1j * wavelength * z)
-    quad = (quad * scale).astype(np.complex64)
     spec = jnp.fft.fftshift(jnp.fft.fft2(u), axes=(-2, -1))
-    return spec * jnp.asarray(quad)
+    return spec * jnp.asarray(fraunhofer_quad(grid, z, wavelength))
 
 
 def fresnel_number(grid: Grid, z: float, wavelength: float) -> float:

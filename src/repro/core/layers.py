@@ -53,10 +53,13 @@ class DiffractiveLayer:
         if method == df.FRAUNHOFER:
             self.h = None  # handled by df.fraunhofer at call time
         else:
-            self.h = df.transfer_function(
+            from repro.core.propagation import cached_transfer_function
+
+            self.h = cached_transfer_function(
                 grid, z, wavelength, method, band_limit, pad=pad
             )
         self._band_limit = band_limit
+        self._h_dev = None  # device-side TF, uploaded once on first use
 
     def param_spec(self) -> ParamSpec:
         n = self.grid.n
@@ -67,11 +70,16 @@ class DiffractiveLayer:
     def propagate(self, u: jax.Array) -> jax.Array:
         if self.method == df.FRAUNHOFER:
             return df.fraunhofer(u, self.grid, self.z, self.wavelength)
+        h_dev = self._h_dev
+        if h_dev is None:
+            h_dev = jnp.asarray(self.h)
+            # cache only concrete arrays (a jit trace yields a Tracer here)
+            if not isinstance(h_dev, jax.core.Tracer):
+                self._h_dev = h_dev
         if self.pad:
-            return df._propagate_padded(
-                u, self.grid, self.z, self.wavelength, self.method, self._band_limit
-            )
-        return df.propagate_tf(u, jnp.asarray(self.h))
+            n = self.grid.n
+            return df.crop_field(df.propagate_tf(df.pad_field(u, n), h_dev), n)
+        return df.propagate_tf(u, h_dev)
 
     def modulate(
         self, phi: jax.Array, u: jax.Array, rng: Optional[jax.Array] = None

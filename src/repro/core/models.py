@@ -20,6 +20,7 @@ from repro.core import diffraction as df
 from repro.core.config import DONNConfig
 from repro.core.laser import Laser, data_to_cplex
 from repro.core.layers import Detector, DiffractiveLayer
+from repro.core.propagation import plan_from_config
 from repro.nn import ParamSpec, init_params
 
 
@@ -71,6 +72,7 @@ class DONN:
         self.laser = laser or Laser(wavelength=cfg.wavelength)
         self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
         self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self._plan = None  # built on first scan-path use
         self.detector = Detector(
             self.grid,
             cfg.num_classes,
@@ -79,6 +81,12 @@ class DONN:
             use_pallas=cfg.use_pallas,
         )
         self.source = self.laser.field(self.grid)  # (n, n) complex64 const
+
+    @property
+    def plan(self):
+        if self._plan is None:
+            self._plan = plan_from_config(self.cfg, self.gamma)
+        return self._plan
 
     # --- params ---
     def param_specs(self):
@@ -112,9 +120,18 @@ class DONN:
         out.append(u)
         return out
 
+    def stacked_phases(self, params) -> jax.Array:
+        return jnp.stack(
+            [params["phase"][f"layer_{i}"] for i in range(len(self.layers))]
+        )
+
     def apply(self, params, x, rng: Optional[jax.Array] = None) -> jax.Array:
         """Images (..., h, w) -> per-class detector intensities (..., C)."""
-        u = self.fields(params, x, rng)[-1]
+        if self.cfg.engine == "eager":
+            u = self.fields(params, x, rng)[-1]
+        else:
+            u = self.plan.apply(self.stacked_phases(params), self.encode(x),
+                                rng)
         return self.detector(u)
 
     def prop_view(self, params, x, rng=None):
@@ -154,19 +171,36 @@ class MultiChannelDONN:
     def apply(self, params, x, rng: Optional[jax.Array] = None) -> jax.Array:
         """x: (..., C, h, w) multi-channel images -> (..., num_classes)."""
         cm = self.channel_model
+        if self.cfg.engine == "eager":
+            def one_channel(phases, xc):
+                p = {"phase": phases}
+                u = cm.fields(p, xc, rng)[-1]
+                return df.intensity(u)
 
-        def one_channel(phases, xc):
-            p = {"phase": phases}
-            u = cm.fields(p, xc, rng)[-1]
-            return df.intensity(u)
-
-        # vmap over the channel axis of both params and inputs
-        inten = jax.vmap(one_channel, in_axes=(0, -3), out_axes=0)(
-            params["phase"], x
+            # vmap over the channel axis of both params and inputs
+            inten = jax.vmap(one_channel, in_axes=(0, -3), out_axes=0)(
+                params["phase"], x
+            )
+            total = jnp.sum(inten, axis=0)  # incoherent sum on shared detector
+            masks = jnp.asarray(cm.detector.masks)
+            return jnp.einsum("...hw,chw->...c", total, masks)
+        # batched plan path: all channels propagate as one (..., C, N, N)
+        # tensor through shared kernels (the TFs are channel-independent;
+        # the (L, C, N, N) phase stack rides the scan).
+        phis = jnp.stack(
+            [params["phase"][f"layer_{i}"] for i in range(len(cm.layers))]
         )
-        total = jnp.sum(inten, axis=0)  # incoherent sum on shared detector
+        u = data_to_cplex(x, self.cfg.n) * jnp.asarray(cm.source)
+        u = cm.plan.apply(phis, u, rng)
         masks = jnp.asarray(cm.detector.masks)
-        return jnp.einsum("...hw,chw->...c", total, masks)
+        if self.cfg.use_pallas:
+            from repro.kernels import ops as kops
+
+            per_ch = kops.intensity_readout(u.real, u.imag, masks)
+            return jnp.sum(per_ch, axis=-2)
+        # one fused accumulation: channel sum + detector pooling in a
+        # single contraction over (channel, h, w)
+        return jnp.einsum("...dhw,chw->...c", df.intensity(u), masks)
 
 
 class SegmentationDONN:
@@ -184,6 +218,7 @@ class SegmentationDONN:
         self.laser = laser or Laser(wavelength=cfg.wavelength)
         self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
         self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self._plan = None  # built on first scan-path use
         self.skip_from = cfg.skip_from
         if self.skip_from is not None:
             # skip hop covers the remaining distance to the detector plane
@@ -198,6 +233,12 @@ class SegmentationDONN:
                 pad=cfg.pad,
             )
         self.source = self.laser.field(self.grid)
+
+    @property
+    def plan(self):
+        if self._plan is None:
+            self._plan = plan_from_config(self.cfg, self.gamma)
+        return self._plan
 
     def param_specs(self):
         return {
@@ -216,15 +257,34 @@ class SegmentationDONN:
         """Images (..., h, w) -> per-pixel intensity map (..., n, n)."""
         u = data_to_cplex(x, self.cfg.n) * jnp.asarray(self.source)
         skip_u = None
-        rngs = (
-            jax.random.split(rng, len(self.layers)) if rng is not None else
-            [None] * len(self.layers)
-        )
-        for i, layer in enumerate(self.layers):
-            u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
-            if self.skip_from is not None and i == self.skip_from:
+        if self.cfg.engine == "eager":
+            rngs = (
+                jax.random.split(rng, len(self.layers)) if rng is not None
+                else [None] * len(self.layers)
+            )
+            for i, layer in enumerate(self.layers):
+                u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
+                if self.skip_from is not None and i == self.skip_from:
+                    skip_u = u
+            u = self.final.propagate(u)
+        else:
+            phis = jnp.stack(
+                [params["phase"][f"layer_{i}"]
+                 for i in range(len(self.layers))]
+            )
+            rngs = (
+                jax.random.split(rng, len(self.layers)) if rng is not None
+                else None
+            )
+            if self.skip_from is None:
+                u = self.plan.forward(phis, u, rngs)
+            else:
+                u = self.plan.forward(phis, u, rngs,
+                                      stop=self.skip_from + 1)
                 skip_u = u
-        u = self.final.propagate(u)
+                u = self.plan.forward(phis, u, rngs,
+                                      start=self.skip_from + 1)
+            u = self.plan.propagate_final(u)
         if skip_u is not None:
             u = (u + self.skip_hop.propagate(skip_u)) / jnp.sqrt(2.0).astype(
                 jnp.complex64

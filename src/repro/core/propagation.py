@@ -1,0 +1,302 @@
+"""Fused scan-based propagation engine (the LightRidge hot path, Fig. 9).
+
+The eager model forward is a per-layer Python loop: every layer re-uploads
+its transfer function, traces its own FFT2 / complex-multiply / iFFT2 /
+phase-modulation chain, and ``MultiChannelDONN`` runs its channels as
+separate unbatched stacks.  This module replaces that loop with a
+*propagation plan*:
+
+1.  **TF cache** — transfer functions are precomputed once per geometry and
+    cached process-wide, keyed by ``(grid, z, wavelength, method,
+    band_limit, pad)``.  They are stored as split real/imag float32 planes
+    (the Pallas kernels are struct-of-arrays) together with the derived
+    polar form ``(arg H, |H|)`` consumed by the fused kernel; band-limit
+    masks and evanescent decay fold into ``|H|``.
+2.  **Stacked scan** — all layer TFs and phase maps stack into ``(L, N,
+    N)`` tensors and the forward becomes a single ``jax.lax.scan`` whose
+    body is traced once: FFT2 -> spectral multiply -> iFFT2 -> phase
+    modulation.  Compile time and HLO size stop scaling with depth.
+3.  **Fused elementwise kernel** — with ``use_pallas`` both elementwise
+    sites in the scan body (the spectral TF multiply and the trainable
+    phase modulation) route through one Pallas kernel,
+    ``repro.kernels.ops.phase_tf_apply``, which performs the cos/sin phase
+    rotation and the amplitude-weighted complex multiply in a single VMEM
+    pass (the TF multiply *is* a phase modulation by ``arg H`` scaled by
+    ``|H|``).
+4.  **Batched channels** — multi-channel inputs keep their channel axis and
+    propagate as one ``(..., C, N, N)`` tensor through shared kernels; the
+    per-channel phase planes ride the scan as ``(L, C, N, N)`` stacks and
+    the detector accumulates all channels in one fused readout
+    (``repro.core.models.MultiChannelDONN``).
+
+The eager path remains available via ``DONNConfig(engine="eager")`` and
+must agree with the plan path to rtol <= 1e-5
+(tests/test_propagation_plan.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codesign as cd
+from repro.core import diffraction as df
+
+# --------------------------------------------------------------------------
+# Transfer-function cache
+# --------------------------------------------------------------------------
+# key -> dict with split-plane float32 arrays: hr, hi (cartesian) and
+# theta, amp (polar, for the fused kernel).  All numpy: build-time consts.
+# Bounded FIFO so DSE sweeps over many geometries can't grow host memory
+# without limit (dicts iterate in insertion order).
+_TF_CACHE: dict = {}
+_TF_CACHE_MAX = 512
+_TF_STATS = {"hits": 0, "misses": 0}
+
+
+def tf_cache_key(grid: df.Grid, z: float, wavelength: float, method: str,
+                 band_limit: bool, pad: bool) -> tuple:
+    return (grid.n, float(grid.pixel_size), float(z), float(wavelength),
+            method, bool(band_limit), bool(pad))
+
+
+def tf_cache_stats() -> dict:
+    return dict(_TF_STATS)
+
+
+def clear_tf_cache() -> None:
+    _TF_CACHE.clear()
+    _TF_STATS["hits"] = 0
+    _TF_STATS["misses"] = 0
+
+
+def transfer_planes(grid: df.Grid, z: float, wavelength: float,
+                    method: str = df.RS, band_limit: bool = True,
+                    pad: bool = False) -> dict:
+    """Cached split-plane transfer function for one propagation gap.
+
+    Returns {"hr", "hi", "theta", "amp"} float32 numpy arrays on the
+    (possibly padded) grid; for ``method="fraunhofer"`` the planes describe
+    the far-field quadratic output factor instead (its amplitude carries
+    the 1/(lambda z) scaling, so the polar form covers it too).
+    """
+    key = tf_cache_key(grid, z, wavelength, method, band_limit, pad)
+    hit = _TF_CACHE.get(key)
+    if hit is not None:
+        _TF_STATS["hits"] += 1
+        return hit
+    _TF_STATS["misses"] += 1
+    if method == df.FRAUNHOFER:
+        h = df.fraunhofer_quad(grid, z, wavelength)
+    else:
+        h = df.transfer_function(grid, z, wavelength, method, band_limit,
+                                 pad=pad)
+    entry = {
+        "hr": np.ascontiguousarray(h.real.astype(np.float32)),
+        "hi": np.ascontiguousarray(h.imag.astype(np.float32)),
+        "theta": np.angle(h).astype(np.float32),
+        "amp": np.abs(h).astype(np.float32),
+    }
+    while len(_TF_CACHE) >= _TF_CACHE_MAX:
+        _TF_CACHE.pop(next(iter(_TF_CACHE)))
+    _TF_CACHE[key] = entry
+    return entry
+
+
+def cached_transfer_function(grid: df.Grid, z: float, wavelength: float,
+                             method: str = df.RS, band_limit: bool = True,
+                             pad: bool = False) -> np.ndarray:
+    """Complex64 view of the cached transfer function (eager-path layers)."""
+    p = transfer_planes(grid, z, wavelength, method, band_limit, pad)
+    return p["hr"] + 1j * p["hi"]
+
+
+# --------------------------------------------------------------------------
+# Propagation plan
+# --------------------------------------------------------------------------
+class PropagationPlan:
+    """Stacked, scan-based forward pipeline for a diffractive stack.
+
+    Covers ``depth`` modulated layers (gap i then phase plane i) plus the
+    final free-space hop to the detector plane.  ``forward`` runs a slice
+    of the modulated layers as one ``lax.scan``; ``propagate_final`` runs
+    the last hop.  Phase stacks may be ``(L, N, N)`` (single channel) or
+    ``(L, C, N, N)`` (multi-channel; fields keep their channel axis).
+    """
+
+    def __init__(
+        self,
+        grid: df.Grid,
+        gaps,  # depth+1 propagation distances (last = hop to detector)
+        wavelength: float,
+        method: str = df.RS,
+        band_limit: bool = True,
+        pad: bool = False,
+        gamma: float = 1.0,
+        device: Optional[cd.DeviceSpec] = None,
+        codesign_mode: str = "none",
+        use_pallas: bool = False,
+    ):
+        if method not in df.METHODS:
+            raise ValueError(f"unknown method {method!r}")
+        self.grid = grid
+        self.gaps = tuple(float(g) for g in gaps)
+        self.depth = len(self.gaps) - 1
+        self.wavelength = wavelength
+        self.method = method
+        self.band_limit = band_limit
+        self.pad = pad and method != df.FRAUNHOFER
+        self.gamma = float(gamma)
+        self.device = device
+        self.codesign_mode = codesign_mode
+        self.use_pallas = use_pallas
+        planes = [
+            transfer_planes(grid, z, wavelength, method, band_limit, self.pad)
+            for z in self.gaps
+        ]
+        # stacked numpy constants; uploaded lazily (imports stay device-free)
+        self._np = {
+            k: np.stack([p[k] for p in planes]) for k in
+            (("theta", "amp") if use_pallas else ("hr", "hi"))
+        }
+        self._jax: dict = {}
+
+    # --- constants ---
+    def _const(self, name: str) -> jax.Array:
+        arr = self._jax.get(name)
+        if arr is None:
+            if name == "h":  # complex TF stack for the jnp path
+                arr = jnp.asarray(self._np["hr"] + 1j * self._np["hi"])
+            else:
+                arr = jnp.asarray(self._np[name])
+            # under a jit trace jnp.asarray yields a Tracer — caching it
+            # across traces would leak; cache only concrete device arrays
+            if not isinstance(arr, jax.core.Tracer):
+                self._jax[name] = arr
+        return arr
+
+    # --- elementwise sites ---
+    def _spectral_mul(self, s: jax.Array, h_or_polar) -> jax.Array:
+        """Multiply a spectrum (or far-field plane) by one layer's TF."""
+        if not self.use_pallas:
+            return s * h_or_polar
+        from repro.kernels import ops as kops
+
+        theta, amp = h_or_polar
+        tr, ti = kops.phase_tf_apply(s.real, s.imag, theta, amp)
+        return jax.lax.complex(tr, ti)
+
+    def _modulate(self, u: jax.Array, phi: jax.Array) -> jax.Array:
+        """gamma * u * exp(j phi); phi (N, N) or per-channel (C, N, N)."""
+        if not self.use_pallas:
+            return u * (self.gamma * jnp.exp(1j * phi.astype(jnp.complex64)))
+        from repro.kernels import ops as kops
+
+        amp = jnp.full(phi.shape, self.gamma, phi.dtype)
+        ur, ui = kops.phase_tf_apply(u.real, u.imag, phi, amp)
+        return jax.lax.complex(ur, ui)
+
+    def _hop(self, u: jax.Array, h_or_polar) -> jax.Array:
+        """One free-space gap with a prepared TF."""
+        if self.method == df.FRAUNHOFER:
+            spec = jnp.fft.fftshift(jnp.fft.fft2(u), axes=(-2, -1))
+            return self._spectral_mul(spec, h_or_polar)
+        if self.pad:
+            n = self.grid.n
+            up = df.pad_field(u, n)
+            out = jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(up), h_or_polar))
+            return df.crop_field(out, n)
+        return jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(u), h_or_polar))
+
+    def _layer_tfs(self, start: int, stop: int):
+        if self.use_pallas:
+            return (self._const("theta")[start:stop],
+                    self._const("amp")[start:stop])
+        return (self._const("h")[start:stop],)
+
+    # --- codesign ---
+    def _codesign_stack(self, phis: jax.Array, rngs) -> jax.Array:
+        """Per-layer hardware quantization on a stacked phase tensor.
+
+        Matches the eager path: layer i uses key rngs[i]; in the multi-
+        channel layout every channel of a layer shares that layer's key
+        (the eager reference passes one rng into each channel's stack).
+        """
+        if self.device is None or self.codesign_mode == "none":
+            return phis
+
+        def per_layer(phi, rng):
+            fn = lambda p: cd.apply_codesign(p, self.device,
+                                             self.codesign_mode, rng)
+            if phi.ndim > 2:  # (C, N, N): share the layer key across channels
+                return jax.vmap(fn)(phi)
+            return fn(phi)
+
+        if rngs is None:
+            return jax.vmap(lambda p: per_layer(p, None))(phis)
+        return jax.vmap(per_layer)(phis, rngs)
+
+    # --- forward ---
+    def forward(self, phis: jax.Array, u: jax.Array, rngs=None,
+                start: int = 0, stop: Optional[int] = None) -> jax.Array:
+        """Scan layers [start, stop) over the field u.
+
+        phis: full (L, ...) phase stack (codesign is applied to the whole
+        stack so per-layer rng alignment is independent of the slice);
+        rngs: optional (L, key) stack from ``jax.random.split``.
+        """
+        stop = self.depth if stop is None else stop
+        phi_eff = self._codesign_stack(phis, rngs)
+        xs = self._layer_tfs(start, stop) + (phi_eff[start:stop],)
+
+        def body(carry, layer):
+            h_or_polar, phi = layer[:-1], layer[-1]
+            if not self.use_pallas:
+                h_or_polar = h_or_polar[0]
+            carry = self._modulate(self._hop(carry, h_or_polar), phi)
+            return carry, None
+
+        u, _ = jax.lax.scan(body, u, xs)
+        return u
+
+    def propagate_final(self, u: jax.Array) -> jax.Array:
+        """The last free-space hop (layer plane -> detector, no modulation)."""
+        tfs = self._layer_tfs(self.depth, self.depth + 1)
+        if self.use_pallas:
+            h_or_polar = (tfs[0][0], tfs[1][0])
+        else:
+            h_or_polar = tfs[0][0]
+        return self._hop(u, h_or_polar)
+
+    def apply(self, phis: jax.Array, u: jax.Array, rng=None) -> jax.Array:
+        """Full stack: scan all layers then the final hop.
+
+        rng is a single key (split into per-layer keys here, mirroring the
+        eager model) or None.
+        """
+        rngs = jax.random.split(rng, self.depth) if rng is not None else None
+        return self.propagate_final(self.forward(phis, u, rngs))
+
+
+def plan_from_config(cfg, gamma: float) -> PropagationPlan:
+    """Build the plan the same way ``_build_layers`` builds the eager stack."""
+    dev = (
+        cd.DeviceSpec(levels=cfg.device_levels,
+                      response_gamma=cfg.response_gamma)
+        if cfg.codesign != "none"
+        else None
+    )
+    return PropagationPlan(
+        df.Grid(cfg.n, cfg.pixel_size),
+        cfg.gap_distances(),
+        cfg.wavelength,
+        method=cfg.approximation,
+        band_limit=cfg.band_limit,
+        pad=cfg.pad,
+        gamma=gamma,
+        device=dev,
+        codesign_mode=cfg.codesign,
+        use_pallas=cfg.use_pallas,
+    )

@@ -75,3 +75,43 @@ def phase_apply_pallas(ur, ui, phi, gamma, *, bh: int, bw: int, interpret: bool)
         out_shape=out_shape,
         interpret=interpret,
     )(ur, ui, phi[None])
+
+
+# ------------------------------------------------- fused phase + TF multiply
+def _phase_tf_apply_kernel(xr_ref, xi_ref, th_ref, amp_ref, or_ref, oi_ref):
+    xr, xi = xr_ref[...], xi_ref[...]
+    th = th_ref[0]
+    amp = amp_ref[0]
+    c = jnp.cos(th) * amp
+    s = jnp.sin(th) * amp
+    or_ref[...] = xr * c - xi * s
+    oi_ref[...] = xr * s + xi * c
+
+
+def phase_tf_apply_pallas(xr, xi, theta, amp, *, nb: int, bh: int, bw: int,
+                          interpret: bool):
+    """x: (P*nb, H, W) split planes; theta/amp: (P, H, W) real planes.
+
+    Computes x * amp * exp(j theta) — the cos/sin phase rotation and the
+    amplitude-weighted complex multiply in one VMEM pass.  Plane p applies
+    to the contiguous batch slab x[p*nb:(p+1)*nb]; the propagation engine
+    uses this for both the trainable phase-modulation planes (theta=phi,
+    amp=gamma) and the cached spectral transfer functions (theta=arg H,
+    amp=|H| — the band-limit mask and evanescent decay fold into amp).
+    """
+    PB, H, W = xr.shape
+    grid = (PB, H // bh, W // bw)
+    x_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
+    p_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b // nb, i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+    ]
+    return pl.pallas_call(
+        _phase_tf_apply_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, p_spec, p_spec],
+        out_specs=[x_spec, x_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, theta, amp)

@@ -145,6 +145,94 @@ def phase_apply(ur, ui, phi, gamma: float = 1.0):
 
 
 # --------------------------------------------------------------------------
+# phase_tf_apply: x * amp * exp(j theta) — the propagation engine's single
+# fused elementwise op (cos/sin rotation + amplitude-weighted complex
+# multiply in one VMEM pass).  Serves both scan-body call sites: the
+# spectral TF multiply (theta=arg H, amp=|H|, constants) and the phase
+# modulation (theta=phi, trainable; amp=gamma).  VJP:
+#   d x     = g * amp * exp(-j theta)          (same kernel, rotated back)
+#   d theta = sum_B (gi * out_r - gr * out_i)  (d out/d theta = j out)
+#   d amp   = 0  (always static geometry: TF magnitudes, band-limit masks,
+#                 gamma planes — mirrors the masks argument of readout)
+# --------------------------------------------------------------------------
+def _phase_tf_apply_raw(xr, xi, theta, amp, nb):
+    PB, H, W = xr.shape
+    bh, bw = _pick_blocks(H, W)
+    Hp, Wp = _ceil_to(H, bh), _ceil_to(W, bw)
+    out_r, out_i = _cm.phase_tf_apply_pallas(
+        _pad2d(xr, Hp, Wp), _pad2d(xi, Hp, Wp),
+        _pad2d(theta, Hp, Wp), _pad2d(amp, Hp, Wp),
+        nb=nb, bh=bh, bw=bw, interpret=_interpret(),
+    )
+    return out_r[..., :H, :W], out_i[..., :H, :W]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _phase_tf_apply(xr, xi, theta, amp, nb):
+    return _phase_tf_apply_raw(xr, xi, theta, amp, nb)
+
+
+def _phase_tf_apply_fwd(xr, xi, theta, amp, nb):
+    out = _phase_tf_apply_raw(xr, xi, theta, amp, nb)
+    return out, (theta, amp, out)
+
+
+def _phase_tf_apply_bwd(nb, res, g):
+    theta, amp, (our, oui) = res
+    gr, gi = g
+    dxr, dxi = _phase_tf_apply_raw(gr, gi, -theta, amp, nb)
+    P, H, W = theta.shape
+    cot = (gi * our - gr * oui).reshape((P, nb, H, W))
+    dtheta = jnp.sum(cot, axis=1)
+    return dxr, dxi, dtheta, jnp.zeros_like(amp)
+
+
+_phase_tf_apply.defvjp(_phase_tf_apply_fwd, _phase_tf_apply_bwd)
+
+
+@jax.jit
+def phase_tf_apply(xr, xi, theta, amp):
+    """x * amp * exp(j theta) on split planes via the fused Pallas kernel.
+
+    x: (..., H, W); theta/amp: (H, W) shared by every field, or (P, H, W)
+    with x: (..., P, H, W) so plane p modulates the fields in slot p (the
+    multi-channel DONN layout: one phase plane per optical channel).
+    """
+    per_plane = theta.ndim == 3
+    squeeze = xr.ndim == 2 or (per_plane and xr.ndim == 3)
+    if squeeze:
+        xr, xi = xr[None], xi[None]
+    H, W = xr.shape[-2:]
+    if per_plane:
+        P = theta.shape[0]
+        lead = xr.shape[:-3]
+        # (..., P, H, W) -> (P, B, H, W) -> (P*B, H, W): plane-major slabs
+        xr3 = jnp.moveaxis(xr.reshape((-1, P, H, W)), 1, 0)
+        xi3 = jnp.moveaxis(xi.reshape((-1, P, H, W)), 1, 0)
+        B = xr3.shape[1]
+        out_r, out_i = _phase_tf_apply(
+            xr3.reshape((P * B, H, W)), xi3.reshape((P * B, H, W)),
+            theta, amp, B,
+        )
+        out_r = jnp.moveaxis(out_r.reshape((P, B, H, W)), 0, 1)
+        out_i = jnp.moveaxis(out_i.reshape((P, B, H, W)), 0, 1)
+        out_r = out_r.reshape(lead + (P, H, W))
+        out_i = out_i.reshape(lead + (P, H, W))
+    else:
+        lead = xr.shape[:-2]
+        flat_r = xr.reshape((-1, H, W))
+        out_r, out_i = _phase_tf_apply(
+            flat_r, xi.reshape((-1, H, W)), theta[None], amp[None],
+            flat_r.shape[0],
+        )
+        out_r = out_r.reshape(lead + (H, W))
+        out_i = out_i.reshape(lead + (H, W))
+    if squeeze:
+        out_r, out_i = out_r[0], out_i[0]
+    return out_r, out_i
+
+
+# --------------------------------------------------------------------------
 # intensity_readout: out[b,c] = sum_hw masks[c] * (ur^2 + ui^2).
 # VJP (masks are non-trainable detector geometry):
 #   d ur = 2 ur * (g @ masks),  d ui = 2 ui * (g @ masks)
@@ -237,6 +325,7 @@ def apply_rope(x, cos, sin):
 # re-export oracles for tests/benchmarks
 complex_mul_ref = ref.complex_mul_ref
 phase_apply_ref = ref.phase_apply_ref
+phase_tf_apply_ref = ref.phase_tf_apply_ref
 intensity_readout_ref = ref.intensity_readout_ref
 rope_ref = ref.rope_ref
 

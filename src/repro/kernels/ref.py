@@ -20,6 +20,19 @@ def phase_apply_ref(ur, ui, phi, gamma=1.0):
     return ur * c - ui * s, ur * s + ui * c
 
 
+def phase_tf_apply_ref(xr, xi, theta, amp):
+    """x * amp * exp(j theta): fused phase rotation + amplitude multiply.
+
+    theta/amp broadcast against x (e.g. x: (B, H, W), theta/amp: (H, W)).
+    Covers both propagation-engine call sites: trainable phase planes
+    (theta=phi, amp=gamma) and spectral transfer functions (theta=arg H,
+    amp=|H|, which absorbs band-limit masks and evanescent decay).
+    """
+    c = jnp.cos(theta) * amp
+    s = jnp.sin(theta) * amp
+    return xr * c - xi * s, xr * s + xi * c
+
+
 def intensity_readout_ref(ur, ui, masks):
     """|u|^2 pooled per detector region: (B,H,W)x(C,H,W) -> (B,C)."""
     inten = ur * ur + ui * ui

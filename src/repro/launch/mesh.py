@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh as _compat_make_mesh
+
 # TPU v5e hardware constants (per chip) — used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
@@ -17,11 +19,11 @@ ICI_BW = 50e9  # B/s per link
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _compat_make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
-    return jax.make_mesh(tuple(shape), tuple(axes))
+def make_mesh(shape, axes, axis_types=None):
+    return _compat_make_mesh(shape, axes, axis_types=axis_types)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -29,4 +31,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} needs {data*model} devices, have {n}")
-    return jax.make_mesh((data, model), ("data", "model"))
+    return _compat_make_mesh((data, model), ("data", "model"))

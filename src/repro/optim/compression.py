@@ -17,6 +17,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 BLOCK = 2048
 
 
@@ -55,7 +57,7 @@ def compressed_psum_mean(x: jax.Array, axis_name: str) -> jax.Array:
     Must run inside shard_map with ``axis_name`` a manual axis.  Payload:
     int8 blocks + f32 scales (~ x.nbytes/4 + x.nbytes/(4*BLOCK)).
     """
-    g = jax.lax.axis_size(axis_name)
+    g = compat.axis_size(axis_name)
     q, scale, n = quantize_int8(x)
     qs = jax.lax.all_gather(q, axis_name)  # (g, nb, BLOCK) int8
     ss = jax.lax.all_gather(scale, axis_name)  # (g, nb)

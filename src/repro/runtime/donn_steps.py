@@ -79,6 +79,8 @@ def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
 
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     optimizer = optimizer or AdamW(lr=0.01)
     sspecs = donn_state_specs(cfg)
     s_shard = shd.tree_shardings(sspecs, mesh, {})  # params replicated
@@ -130,7 +132,7 @@ def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
         b_specs = {"images": batch_spec, "labels": batch_spec}
     state_specs_sm = jax.tree.map(lambda _: P(), sspecs)
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local_step, mesh=mesh,
             in_specs=(state_specs_sm, b_specs),
             out_specs=(state_specs_sm, {"loss": P()}),

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _local_fft2(x, *, axis: str, k: int, inverse: bool):
     fft = jnp.fft.ifft if inverse else jnp.fft.fft
@@ -40,7 +42,7 @@ def pencil_fft2(u, mesh: Mesh, axis: str = "model", inverse: bool = False):
     """FFT2 of u (B, H, W) with H sharded over ``axis`` on ``mesh``."""
     k = mesh.shape[axis]
     spec = P(None, axis, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_local_fft2, axis=axis, k=k, inverse=inverse),
         mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False,
     )

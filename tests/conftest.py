@@ -8,6 +8,15 @@ import pytest
 REPO = pathlib.Path(__file__).resolve().parent.parent
 SRC = REPO / "src"
 
+try:  # pragma: no cover - depends on the environment
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Register the local fallback so `from hypothesis import given, ...`
+    # works in every test module (see tests/_hypothesis_compat.py).
+    import _hypothesis_compat
+
+    sys.modules["hypothesis"] = _hypothesis_compat
+
 
 def run_subprocess(code: str, device_count: int = 8, timeout: int = 560):
     """Run python code in a fresh process with N host platform devices."""

@@ -71,12 +71,13 @@ SUITE = textwrap.dedent("""
                                                  rtol=2e-3, atol=2e-3))
 
     # 3. compressed psum over a pod axis (shard_map)
+    from repro.compat import shard_map
     from repro.optim.compression import compressed_psum_mean
     mesh_pod = make_mesh((2, 4), ("pod", "data"))
     x = jnp.asarray(rr.normal(size=(2, 256)), jnp.float32)  # per-pod rows
-    f = jax.shard_map(lambda v: compressed_psum_mean(v, "pod"),
-                      mesh=mesh_pod, in_specs=P("pod", None),
-                      out_specs=P("pod", None), check_vma=False)
+    f = shard_map(lambda v: compressed_psum_mean(v, "pod"),
+                  mesh=mesh_pod, in_specs=P("pod", None),
+                  out_specs=P("pod", None), check_vma=False)
     got = f(x)
     want = jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
     err = float(jnp.max(jnp.abs(got - want)))

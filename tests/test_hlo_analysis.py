@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from conftest import run_subprocess
+from repro.compat import compiled_cost_analysis
 from repro.runtime.hlo_analysis import analyze, parse_hlo
 
 
@@ -22,7 +23,7 @@ class TestLoopFree:
             jax.ShapeDtypeStruct((128, 256), jnp.float32),
             jax.ShapeDtypeStruct((256, 512), jnp.float32),
         ).compile()
-        xla = c.cost_analysis()
+        xla = compiled_cost_analysis(c)
         mine = analyze(c.as_text())
         assert abs(mine.flops - xla["flops"]) / xla["flops"] < 0.05
         assert abs(mine.bytes - xla["bytes accessed"]) / xla[
@@ -84,7 +85,7 @@ class TestTripCounting:
             jax.ShapeDtypeStruct((32, 32), jnp.float32),
             jax.ShapeDtypeStruct((8, 32), jnp.float32),
         ).compile()
-        xla = c.cost_analysis()["flops"]
+        xla = compiled_cost_analysis(c)["flops"]
         mine = analyze(c.as_text()).dot_flops
         assert mine > 10 * xla  # mine trip-counts, XLA doesn't
 
@@ -93,10 +94,10 @@ COLLECTIVE_SUITE = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     from repro.runtime.hlo_analysis import analyze
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("model",), axis_types=("auto",))
     results = {}
 
     # per scan iteration the model-sharded dot output (32,16) is gathered

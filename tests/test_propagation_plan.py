@@ -1,0 +1,194 @@
+"""Propagation-plan engine: scan path vs eager loop, TF cache, fused kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DONNConfig, build_model
+from repro.core import diffraction as df
+from repro.core import propagation as pp
+from repro.data import synth_digits, synth_rgb_scenes, synth_seg
+from repro.kernels import ops
+
+TINY = dict(name="t", n=64, depth=3, distance=0.05, det_size=8)
+
+
+def _pair(cfg_kw):
+    cfg = DONNConfig(**cfg_kw)
+    return build_model(cfg), build_model(
+        dataclasses.replace(cfg, engine="eager")
+    )
+
+
+class TestScanMatchesEager:
+    @pytest.mark.parametrize(
+        "extra",
+        [
+            {},
+            {"approximation": "fresnel"},
+            {"pad": True},
+            {"approximation": "fraunhofer", "band_limit": False},
+            {"use_pallas": True},
+            {"codesign": "qat", "device_levels": 64},
+            {"distances": (0.04, 0.05, 0.06, 0.08)},
+        ],
+        ids=["rs", "fresnel", "padded", "fraunhofer", "pallas", "qat",
+             "heterogeneous"],
+    )
+    def test_classify_forward(self, extra):
+        m_scan, m_eager = _pair({**TINY, **extra})
+        p = m_scan.init(jax.random.PRNGKey(0))
+        xs, _ = synth_digits(4, seed=0)
+        x = jnp.asarray(xs)
+        np.testing.assert_allclose(
+            m_scan.apply(p, x), m_eager.apply(p, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_classify_gradients_match(self):
+        m_scan, m_eager = _pair(TINY)
+        p = m_scan.init(jax.random.PRNGKey(1))
+        xs, _ = synth_digits(4, seed=1)
+        x = jnp.asarray(xs)
+        g1 = jax.grad(lambda p: jnp.sum(m_scan.apply(p, x) ** 2))(p)
+        g2 = jax.grad(lambda p: jnp.sum(m_eager.apply(p, x) ** 2))(p)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_segmentation_with_skip(self):
+        m_scan, m_eager = _pair(
+            {**TINY, "segmentation": True, "skip_from": 0, "layer_norm": True}
+        )
+        p = m_scan.init(jax.random.PRNGKey(0))
+        xs, _ = synth_seg(4, seed=0)
+        x = jnp.asarray(xs)
+        np.testing.assert_allclose(
+            m_scan.apply(p, x, train=True), m_eager.apply(p, x, train=True),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_jit_apply(self):
+        m_scan, m_eager = _pair(TINY)
+        p = m_scan.init(jax.random.PRNGKey(0))
+        xs, _ = synth_digits(4, seed=2)
+        x = jnp.asarray(xs)
+        got = jax.jit(lambda p, x: m_scan.apply(p, x))(p, x)
+        np.testing.assert_allclose(got, m_eager.apply(p, x), rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestTFCache:
+    def test_repeated_geometry_hits(self):
+        pp.clear_tf_cache()
+        cfg = DONNConfig(**TINY)
+        build_model(cfg)
+        s0 = pp.tf_cache_stats()
+        assert s0["misses"] > 0
+        build_model(cfg)  # identical geometry: everything served from cache
+        s1 = pp.tf_cache_stats()
+        assert s1["misses"] == s0["misses"]
+        assert s1["hits"] > s0["hits"]
+
+    def test_distinct_geometry_misses(self):
+        pp.clear_tf_cache()
+        g = df.Grid(32, 36e-6)
+        pp.transfer_planes(g, 0.05, 532e-9)
+        before = pp.tf_cache_stats()["misses"]
+        pp.transfer_planes(g, 0.06, 532e-9)  # different z
+        pp.transfer_planes(g, 0.05, 633e-9)  # different wavelength
+        assert pp.tf_cache_stats()["misses"] == before + 2
+
+    def test_cached_planes_match_direct_computation(self):
+        g = df.Grid(32, 36e-6)
+        h = df.transfer_function(g, 0.05, 532e-9, df.RS, True)
+        planes = pp.transfer_planes(g, 0.05, 532e-9, df.RS, True)
+        np.testing.assert_array_equal(planes["hr"], h.real)
+        np.testing.assert_array_equal(planes["hi"], h.imag)
+        np.testing.assert_allclose(
+            planes["amp"] * np.exp(1j * planes["theta"]), h, atol=1e-6
+        )
+
+
+class TestMultiChannelBatched:
+    def test_batched_matches_per_channel_reference(self):
+        cfg = DONNConfig(**{**TINY, "channels": 3, "num_classes": 6})
+        m_scan, m_eager = _pair(cfg.__dict__)
+        p = m_scan.init(jax.random.PRNGKey(0))
+        xs, _ = synth_rgb_scenes(4, seed=0)
+        x = jnp.asarray(xs)
+        np.testing.assert_allclose(
+            m_scan.apply(p, x), m_eager.apply(p, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_batched_gradients_match(self):
+        cfg = DONNConfig(**{**TINY, "channels": 3, "num_classes": 6})
+        m_scan, m_eager = _pair(cfg.__dict__)
+        p = m_scan.init(jax.random.PRNGKey(2))
+        xs, _ = synth_rgb_scenes(4, seed=1)
+        x = jnp.asarray(xs)
+        g1 = jax.grad(lambda p: jnp.sum(m_scan.apply(p, x) ** 2))(p)
+        g2 = jax.grad(lambda p: jnp.sum(m_eager.apply(p, x) ** 2))(p)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_batched_pallas_readout(self):
+        cfg_kw = {**TINY, "channels": 3, "num_classes": 6, "use_pallas": True}
+        m_scan, m_eager = _pair(cfg_kw)
+        p = m_scan.init(jax.random.PRNGKey(0))
+        xs, _ = synth_rgb_scenes(4, seed=2)
+        x = jnp.asarray(xs)
+        np.testing.assert_allclose(
+            m_scan.apply(p, x), m_eager.apply(p, x), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestPhaseTFApplyKernel:
+    def _rand(self, shape, seed):
+        r = np.random.default_rng(seed)
+        return jnp.asarray(r.normal(size=shape), jnp.float32)
+
+    @pytest.mark.parametrize("shape", [(1, 8, 128), (3, 37, 111), (2, 64, 64)])
+    def test_forward_matches_ref(self, shape):
+        B, H, W = shape
+        xr, xi = self._rand(shape, 1), self._rand(shape, 2)
+        th, am = self._rand((H, W), 3), jnp.abs(self._rand((H, W), 4))
+        got = ops.phase_tf_apply(xr, xi, th, am)
+        want = ops.phase_tf_apply_ref(xr, xi, th, am)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+    def test_per_plane_forward(self):
+        P, B, H, W = 3, 4, 16, 64
+        xr, xi = self._rand((B, P, H, W), 5), self._rand((B, P, H, W), 6)
+        th = self._rand((P, H, W), 7)
+        am = jnp.abs(self._rand((P, H, W), 8))
+        got = ops.phase_tf_apply(xr, xi, th, am)
+        want = ops.phase_tf_apply_ref(xr, xi, th, am)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+    def test_gradients_match_ref(self):
+        B, H, W = 2, 33, 65
+        xr, xi = self._rand((B, H, W), 9), self._rand((B, H, W), 10)
+        th, am = self._rand((H, W), 11), jnp.abs(self._rand((H, W), 12))
+
+        def loss(fn, xr, xi, th):
+            a, b = fn(xr, xi, th, am)
+            return jnp.sum(a**2 + 2.0 * b)
+
+        g1 = jax.grad(lambda *a: loss(ops.phase_tf_apply, *a),
+                      argnums=(0, 1, 2))(xr, xi, th)
+        g2 = jax.grad(lambda *a: loss(ops.phase_tf_apply_ref, *a),
+                      argnums=(0, 1, 2))(xr, xi, th)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_unit_amp_matches_phase_apply(self):
+        B, H, W = 2, 16, 128
+        xr, xi = self._rand((B, H, W), 13), self._rand((B, H, W), 14)
+        th = self._rand((H, W), 15)
+        got = ops.phase_tf_apply(xr, xi, th, jnp.ones((H, W), jnp.float32))
+        want = ops.phase_apply(xr, xi, th, 1.0)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
