@@ -1,0 +1,123 @@
+"""Batched DSE candidate emulation: sequential vs vmapped (compile-once).
+
+Every ``LightRidgeDSE.explore`` verification and ``sensitivity_analysis``
+point used to pay a full ``build_model`` + fresh ``jit(apply)`` cycle —
+trace + compile + run per candidate geometry.  ``emulate_batch`` pushes all
+K candidates through one shared compiled forward (per-candidate transfer
+planes and sources enter as traced inputs, not baked constants), so the
+candidate set costs one compile + one device call.
+
+For K in {2, 8, 32}: K candidate geometries (pixel_size x distance spread
+around the paper's operating point) are emulated
+
+- ``sequential``: K x (build_model + jit(model.apply) + block) with cold
+  plan/executable caches — the pre-batching DSE verification path;
+- ``batched``: one ``emulate_batch(cfgs, params, x)`` call, also from cold
+  caches (end-to-end: TF/plan builds + trace + compile + run);
+- ``batched_steady``: the same call again — plans and the executable now
+  come from the caches, i.e. the cost of every later sweep iteration.
+
+Batched results must match the sequential per-candidate outputs to
+rtol <= 1e-5.  Rows print in the standard CSV schema and persist to
+``artifacts/bench/BENCH_dse_batched.json``.
+
+    PYTHONPATH=src python benchmarks/bench_dse_batched.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, write_bench_json
+from repro.core import DONNConfig, build_model, emulate_batch
+from repro.core import propagation as pp
+from repro.core.models import clear_emulation_caches
+from repro.data import synth_digits
+
+N = 64
+DEPTH = 8
+BATCH = 8
+KS = (2, 8, 32)
+
+
+def _candidates(k: int) -> list:
+    """k geometry candidates: a (pixel_size, distance) spread at 532nm."""
+    rng = np.random.default_rng(0)
+    ps = rng.uniform(28e-6, 44e-6, k)
+    ds = rng.uniform(0.04, 0.08, k)
+    return [
+        DONNConfig(name=f"cand{i}", n=N, depth=DEPTH, det_size=8,
+                   pixel_size=float(ps[i]), distance=float(ds[i]))
+        for i in range(k)
+    ]
+
+
+def _cold_caches():
+    pp.clear_tf_cache()
+    clear_emulation_caches()  # models, batched inputs, plans, executables
+
+
+def _bench_k(k: int, params, x, rows: list) -> dict:
+    cfgs = _candidates(k)
+
+    _cold_caches()
+    t0 = time.perf_counter()
+    seq = []
+    for cfg in cfgs:
+        model = build_model(cfg)
+        fn = jax.jit(lambda p, xb: model.apply(p, xb))
+        seq.append(jax.block_until_ready(fn(params, x)))
+    t_seq = time.perf_counter() - t0
+
+    _cold_caches()
+    t0 = time.perf_counter()
+    bat = jax.block_until_ready(emulate_batch(cfgs, params, x))
+    t_bat = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(emulate_batch(cfgs, params, x))
+    t_steady = time.perf_counter() - t0
+
+    match = all(
+        np.allclose(bat[i], seq[i], rtol=1e-5, atol=1e-5) for i in range(k)
+    )
+    sp = t_seq / t_bat
+    row(f"dse_batched/K{k}/sequential", t_seq * 1e6,
+        f"per_candidate={t_seq / k * 1e3:.1f}ms")
+    rows.append({"name": f"dse_batched/K{k}/sequential", "us": t_seq * 1e6,
+                 "derived": f"per_candidate={t_seq / k * 1e3:.1f}ms"})
+    row(f"dse_batched/K{k}/batched", t_bat * 1e6,
+        f"match_rtol1e-5={match},steady={t_steady * 1e3:.1f}ms")
+    rows.append({"name": f"dse_batched/K{k}/batched", "us": t_bat * 1e6,
+                 "derived": f"match_rtol1e-5={match},"
+                            f"steady={t_steady * 1e3:.1f}ms"})
+    row(f"dse_batched/K{k}/speedup", t_bat * 1e6,
+        f"batched_vs_sequential={sp:.2f}x,"
+        f"steady_vs_sequential={t_seq / t_steady:.1f}x")
+    rows.append({"name": f"dse_batched/K{k}/speedup", "us": t_bat * 1e6,
+                 "derived": f"batched_vs_sequential={sp:.2f}x,"
+                            f"steady_vs_sequential={t_seq / t_steady:.1f}x"})
+    return {"speedup": round(sp, 3), "steady_speedup": round(t_seq / t_steady, 3),
+            "match": bool(match)}
+
+
+def main():
+    xs, _ = synth_digits(BATCH, seed=0)
+    x = jnp.asarray(xs)
+    params = build_model(_candidates(1)[0]).init(jax.random.PRNGKey(0))
+    rows: list = []
+    speeds = {}
+    for k in KS:
+        speeds[f"K{k}"] = _bench_k(k, params, x, rows)
+    write_bench_json(
+        "dse_batched", rows,
+        meta={"backend": jax.default_backend(), "n": N, "depth": DEPTH,
+              "batch": BATCH, "speedups": speeds},
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,12 @@ Two metrics per cell:
   loop into the same op sequence).
 - ``steady``: post-compile per-call latency.
 
+An unroll sweep (depth-16 classify cell, ``scan_unroll`` in {1, 2, 4, 8,
+default}) tracks the steady-state trajectory of the scan-tuning knob
+across PRs: the rolled loop (unroll=1) pays XLA:CPU while-loop overhead,
+the tuned default (full unroll at this depth, ``default_scan_unroll``)
+recovers it.
+
 Rows print in the standard CSV schema and persist to
 ``artifacts/bench/BENCH_propagation_plan.json``.
 
@@ -31,6 +37,7 @@ import numpy as np
 
 from benchmarks.common import row, time_fn, write_bench_json
 from repro.core import DONNConfig, build_model
+from repro.core.propagation import default_scan_unroll
 
 
 CELLS = [
@@ -42,6 +49,13 @@ CELLS = [
                           segmentation=True, skip_from=1, layer_norm=True),
      (8, 64, 64)),
 ]
+
+
+def _steady(fn, params, x, reps: int = 3, iters: int = 10) -> float:
+    """min-of-reps steady-state timing (robust to shared-CPU noise)."""
+    return min(
+        time_fn(fn, params, x, warmup=1, iters=iters) for _ in range(reps)
+    )
 
 
 def _bench_cell(label: str, cfg_kw: dict, x_shape, rows: list):
@@ -56,7 +70,7 @@ def _bench_cell(label: str, cfg_kw: dict, x_shape, rows: list):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(params, x))
         first[engine] = (time.perf_counter() - t0) * 1e6
-        steady[engine] = time_fn(fn, params, x, warmup=1, iters=10)
+        steady[engine] = _steady(fn, params, x)
         name = f"prop_plan/{label}/{engine}"
         derived = (f"first_call={first[engine]/1e6:.2f}s,"
                    f"depth={cfg.depth},n={cfg.n}")
@@ -72,11 +86,39 @@ def _bench_cell(label: str, cfg_kw: dict, x_shape, rows: list):
     return {"first_call": round(sp_first, 3), "steady": round(sp_steady, 3)}
 
 
+def _bench_unroll_sweep(rows: list) -> dict:
+    """Steady-state unroll trajectory on the depth-16 classify cell."""
+    label, cfg_kw, x_shape = CELLS[0]
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.uniform(0.0, 1.0, x_shape), jnp.float32)
+    eager = build_model(DONNConfig(**cfg_kw, engine="eager"))
+    params = eager.init(jax.random.PRNGKey(0))
+    t_eager = _steady(jax.jit(lambda p, xb: eager.apply(p, xb)), params, x,
+                      reps=5, iters=20)
+    depth = DONNConfig(**cfg_kw).depth
+    out = {}
+    for unroll in (1, 2, 4, 8, None):
+        cfg = DONNConfig(**cfg_kw, scan_unroll=unroll)
+        model = build_model(cfg)
+        us = _steady(jax.jit(lambda p, xb: model.apply(p, xb)), params, x,
+                     reps=5, iters=20)
+        eff = default_scan_unroll(depth) if unroll is None else unroll
+        tag = "default" if unroll is None else str(unroll)
+        name = f"prop_plan/unroll/{tag}"
+        derived = (f"unroll={eff},steady_vs_eager={t_eager / us:.2f}x,"
+                   f"depth={depth}")
+        row(name, us, derived)
+        rows.append({"name": name, "us": us, "derived": derived})
+        out[tag] = round(t_eager / us, 3)
+    return out
+
+
 def main():
     rows: list = []
     speeds = {}
     for label, cfg_kw, x_shape in CELLS:
         speeds[label] = _bench_cell(label, cfg_kw, x_shape, rows)
+    speeds["unroll_steady_vs_eager"] = _bench_unroll_sweep(rows)
     write_bench_json(
         "propagation_plan", rows,
         meta={"backend": jax.default_backend(), "speedups": speeds},

@@ -17,6 +17,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_dse,
+        bench_dse_batched,
         bench_energy,
         bench_kernel_breakdown,
         bench_propagation_plan,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig8_runtime", bench_runtime.main),
         ("fig9_kernel_breakdown", bench_kernel_breakdown.main),
         ("propagation_plan", bench_propagation_plan.main),
+        ("dse_batched", bench_dse_batched.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),

@@ -18,6 +18,18 @@ from repro.core.models import (
     MultiChannelDONN,
     SegmentationDONN,
     build_model,
+    cached_apply,
+    cached_model,
+    clear_emulation_caches,
+    emulate_batch,
+)
+from repro.core.propagation import (
+    PropagationPlan,
+    clear_plan_cache,
+    clear_tf_cache,
+    plan_cache_stats,
+    plan_from_config,
+    tf_cache_stats,
 )
 
 __all__ = [
@@ -25,4 +37,7 @@ __all__ = [
     "intensity", "propagate", "propagate_tf", "transfer_function",
     "Laser", "data_to_cplex", "Detector", "DiffractiveLayer",
     "DONN", "MultiChannelDONN", "SegmentationDONN", "build_model",
+    "cached_apply", "cached_model", "clear_emulation_caches", "emulate_batch",
+    "PropagationPlan", "plan_from_config", "plan_cache_stats",
+    "clear_plan_cache", "tf_cache_stats", "clear_tf_cache",
 ]

@@ -43,12 +43,24 @@ class DONNConfig:
     use_pallas: bool = False  # Pallas kernels for modulation/readout
     engine: str = "scan"  # "scan" (fused PropagationPlan) | "eager" (per-layer loop)
     input_size: int = 28  # native input image side (embedded/upsampled to n)
+    # scan-engine steady-state tuning: unroll factor for the layer scan
+    # (None = depth heuristic, see propagation.default_scan_unroll)
+    scan_unroll: Optional[int] = None
+    # TF-plane storage dtype: "float32" (reference) | "bfloat16" (half the
+    # constant memory; accumulation stays f32, agreement tolerance loosens)
+    tf_dtype: str = "float32"
 
     def __post_init__(self):
         if self.engine not in ("scan", "eager"):
             raise ValueError(
                 f"engine must be 'scan' or 'eager', got {self.engine!r}"
             )
+        if self.tf_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"tf_dtype must be 'float32' or 'bfloat16', got {self.tf_dtype!r}"
+            )
+        if self.scan_unroll is not None and self.scan_unroll < 1:
+            raise ValueError("scan_unroll must be >= 1")
 
     def gap_distances(self) -> tuple:
         """depth+1 propagation gaps: source->L1, L_i->L_{i+1}, L_last->det."""

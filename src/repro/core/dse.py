@@ -175,14 +175,33 @@ class LightRidgeDSE:
         return self.model.predict(X)
 
     def explore(self, lam: float, candidates: Sequence[tuple],
-                emulate: Callable[[tuple], float], top_k: int = 2) -> DSEResult:
-        """Predict the landscape at ``lam``; emulate only the top_k points."""
+                emulate: Optional[Callable[[tuple], float]] = None,
+                top_k: int = 2, *,
+                emulate_batch: Optional[Callable] = None) -> DSEResult:
+        """Predict the landscape at ``lam``; emulate only the top_k points.
+
+        Verification runs through ``emulate`` (one point -> one score,
+        called top_k times) or — preferred — ``emulate_batch`` (all top_k
+        points -> scores in one call, e.g. built on
+        ``repro.core.models.emulate_batch`` so the candidates share one
+        compiled vmapped forward instead of K trace+compile+run cycles).
+        """
+        if emulate is None and emulate_batch is None:
+            raise ValueError("explore needs emulate or emulate_batch")
         pts = [(lam, d, D) for (d, D) in candidates]
         preds = self.predict(pts)
         order = np.argsort(-preds)[:top_k]
+        if emulate_batch is not None:
+            accs = list(emulate_batch([pts[i] for i in order]))
+            if len(accs) != len(order):
+                raise ValueError(
+                    f"emulate_batch returned {len(accs)} scores for "
+                    f"{len(order)} candidates"
+                )
+        else:
+            accs = [emulate(pts[i]) for i in order]
         best_acc, best_pt, best_pred = -1.0, None, 0.0
-        for i in order:
-            acc = emulate(pts[i])
+        for i, acc in zip(order, accs):
             if acc > best_acc:
                 best_acc, best_pt, best_pred = acc, pts[i], preds[i]
         return DSEResult(
@@ -195,18 +214,40 @@ class LightRidgeDSE:
         )
 
 
-def sensitivity_analysis(emulate: Callable[[tuple], float], best: tuple,
-                         deltas=(-0.10, -0.05, 0.0, 0.05, 0.10)) -> dict:
-    """Single-parameter control-variable tests (paper Table 3)."""
+def sensitivity_analysis(emulate: Optional[Callable[[tuple], float]],
+                         best: tuple,
+                         deltas=(-0.10, -0.05, 0.0, 0.05, 0.10),
+                         emulate_batch: Optional[Callable] = None) -> dict:
+    """Single-parameter control-variable tests (paper Table 3).
+
+    With ``emulate_batch`` every delta point of every parameter is scored
+    in one batched call (3 * len(deltas) candidates share one compiled
+    forward) instead of one sequential emulation per point.
+    """
+    if emulate is None and emulate_batch is None:
+        raise ValueError("sensitivity_analysis needs emulate or emulate_batch")
     lam, d, D = best
-    out = {}
-    for name, idx in (("wavelength", 0), ("unit_size", 1), ("distance", 2)):
-        row = []
+    params = (("wavelength", 0), ("unit_size", 1), ("distance", 2))
+    pts = []
+    for _, idx in params:
         for delta in deltas:
             p = [lam, d, D]
             p[idx] = p[idx] * (1.0 + delta)
-            row.append((delta, emulate(tuple(p))))
-        out[name] = row
+            pts.append(tuple(p))
+    if emulate_batch is not None:
+        accs = list(emulate_batch(pts))
+        if len(accs) != len(pts):
+            raise ValueError(
+                f"emulate_batch returned {len(accs)} scores for "
+                f"{len(pts)} points"
+            )
+    else:
+        accs = [emulate(p) for p in pts]
+    out = {}
+    k = len(deltas)
+    for j, (name, _) in enumerate(params):
+        out[name] = [(delta, accs[j * k + i])
+                     for i, delta in enumerate(deltas)]
     return out
 
 

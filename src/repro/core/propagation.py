@@ -4,10 +4,10 @@ The eager model forward is a per-layer Python loop: every layer re-uploads
 its transfer function, traces its own FFT2 / complex-multiply / iFFT2 /
 phase-modulation chain, and ``MultiChannelDONN`` runs its channels as
 separate unbatched stacks.  This module replaces that loop with a
-*propagation plan*:
+*propagation plan* and a compile-once emulation runtime on top of it:
 
 1.  **TF cache** — transfer functions are precomputed once per geometry and
-    cached process-wide, keyed by ``(grid, z, wavelength, method,
+    cached process-wide (LRU), keyed by ``(grid, z, wavelength, method,
     band_limit, pad)``.  They are stored as split real/imag float32 planes
     (the Pallas kernels are struct-of-arrays) together with the derived
     polar form ``(arg H, |H|)`` consumed by the fused kernel; band-limit
@@ -15,7 +15,10 @@ separate unbatched stacks.  This module replaces that loop with a
 2.  **Stacked scan** — all layer TFs and phase maps stack into ``(L, N,
     N)`` tensors and the forward becomes a single ``jax.lax.scan`` whose
     body is traced once: FFT2 -> spectral multiply -> iFFT2 -> phase
-    modulation.  Compile time and HLO size stop scaling with depth.
+    modulation.  The scan carries an ``unroll`` knob
+    (``DONNConfig.scan_unroll``; default from ``default_scan_unroll``) that
+    claws back XLA:CPU's while-loop overhead in steady state, and TF planes
+    may be stored bf16 with f32 accumulation (``DONNConfig.tf_dtype``).
 3.  **Fused elementwise kernel** — with ``use_pallas`` both elementwise
     sites in the scan body (the spectral TF multiply and the trainable
     phase modulation) route through one Pallas kernel,
@@ -23,11 +26,23 @@ separate unbatched stacks.  This module replaces that loop with a
     rotation and the amplitude-weighted complex multiply in a single VMEM
     pass (the TF multiply *is* a phase modulation by ``arg H`` scaled by
     ``|H|``).
-4.  **Batched channels** — multi-channel inputs keep their channel axis and
-    propagate as one ``(..., C, N, N)`` tensor through shared kernels; the
-    per-channel phase planes ride the scan as ``(L, C, N, N)`` stacks and
-    the detector accumulates all channels in one fused readout
-    (``repro.core.models.MultiChannelDONN``).
+4.  **Batched channels and candidates** — multi-channel inputs keep their
+    channel axis and propagate as one ``(..., C, N, N)`` tensor through
+    shared kernels with ``(L, C, N, N)`` phase stacks
+    (``repro.core.models.MultiChannelDONN``).  The same machinery batches
+    *candidates*: ``PropagationPlan.apply_batch`` vmaps a ``(K, L, N, N)``
+    (or ``(K, L, C, N, N)``) stack of K phase configurations through one
+    shared compiled forward, and ``forward``/``apply`` accept externally
+    supplied transfer planes (``tfs=...``) so per-candidate *geometries*
+    ride the same executable as traced inputs instead of baked constants
+    (``repro.core.models.emulate_batch``, the DSE verification path).
+5.  **Plan and executable caches** — ``plan_from_config`` memoizes
+    ``PropagationPlan`` instances per geometry tuple and
+    ``cached_executable`` memoizes AOT-compiled programs keyed by
+    ``(statics, input shapes/dtypes)``; ``plan_cache_stats()`` /
+    ``clear_plan_cache()`` mirror the TF-cache API.  Repeated emulation
+    (DSE verification sweeps, sensitivity analysis, codesign loops) stops
+    paying trace+compile per candidate.
 
 The eager path remains available via ``DONNConfig(engine="eager")`` and
 must agree with the plan path to rtol <= 1e-5
@@ -35,7 +50,7 @@ must agree with the plan path to rtol <= 1e-5
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,15 +60,40 @@ from repro.core import codesign as cd
 from repro.core import diffraction as df
 
 # --------------------------------------------------------------------------
-# Transfer-function cache
+# Process-wide caches (TF planes, plans, executables)
 # --------------------------------------------------------------------------
-# key -> dict with split-plane float32 arrays: hr, hi (cartesian) and
-# theta, amp (polar, for the fused kernel).  All numpy: build-time consts.
-# Bounded FIFO so DSE sweeps over many geometries can't grow host memory
-# without limit (dicts iterate in insertion order).
+# All three are bounded LRU maps built on dict insertion order: lookups
+# reinsert the hit entry at the back, eviction pops the front — a DSE sweep
+# alternating more geometries than the bound can hold no longer evicts its
+# own hot entries (the old FIFO did).
 _TF_CACHE: dict = {}
 _TF_CACHE_MAX = 512
 _TF_STATS = {"hits": 0, "misses": 0}
+
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 64
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+_EXEC_CACHE: dict = {}
+_EXEC_CACHE_MAX = 64
+_EXEC_STATS = {"hits": 0, "misses": 0}
+
+
+def _cache_get(cache: dict, key, stats: dict):
+    """LRU lookup: refresh recency on hit (dicts iterate in insertion order)."""
+    entry = cache.pop(key, None)
+    if entry is None:
+        stats["misses"] += 1
+        return None
+    stats["hits"] += 1
+    cache[key] = entry  # reinsert at the back: most recently used
+    return entry
+
+
+def _cache_put(cache: dict, key, value, max_size: int) -> None:
+    while len(cache) >= max_size:
+        cache.pop(next(iter(cache)))  # front = least recently used
+    cache[key] = value
 
 
 def tf_cache_key(grid: df.Grid, z: float, wavelength: float, method: str,
@@ -72,6 +112,27 @@ def clear_tf_cache() -> None:
     _TF_STATS["misses"] = 0
 
 
+def plan_cache_stats() -> dict:
+    """Plan + executable cache counters (mirrors ``tf_cache_stats``)."""
+    return {
+        "hits": _PLAN_STATS["hits"],
+        "misses": _PLAN_STATS["misses"],
+        "size": len(_PLAN_CACHE),
+        "exec_hits": _EXEC_STATS["hits"],
+        "exec_misses": _EXEC_STATS["misses"],
+        "exec_size": len(_EXEC_CACHE),
+    }
+
+
+def clear_plan_cache() -> None:
+    """Drop all cached plans and compiled executables, reset counters."""
+    _PLAN_CACHE.clear()
+    _EXEC_CACHE.clear()
+    for s in (_PLAN_STATS, _EXEC_STATS):
+        s["hits"] = 0
+        s["misses"] = 0
+
+
 def transfer_planes(grid: df.Grid, z: float, wavelength: float,
                     method: str = df.RS, band_limit: bool = True,
                     pad: bool = False) -> dict:
@@ -83,11 +144,9 @@ def transfer_planes(grid: df.Grid, z: float, wavelength: float,
     the 1/(lambda z) scaling, so the polar form covers it too).
     """
     key = tf_cache_key(grid, z, wavelength, method, band_limit, pad)
-    hit = _TF_CACHE.get(key)
+    hit = _cache_get(_TF_CACHE, key, _TF_STATS)
     if hit is not None:
-        _TF_STATS["hits"] += 1
         return hit
-    _TF_STATS["misses"] += 1
     if method == df.FRAUNHOFER:
         h = df.fraunhofer_quad(grid, z, wavelength)
     else:
@@ -99,9 +158,7 @@ def transfer_planes(grid: df.Grid, z: float, wavelength: float,
         "theta": np.angle(h).astype(np.float32),
         "amp": np.abs(h).astype(np.float32),
     }
-    while len(_TF_CACHE) >= _TF_CACHE_MAX:
-        _TF_CACHE.pop(next(iter(_TF_CACHE)))
-    _TF_CACHE[key] = entry
+    _cache_put(_TF_CACHE, key, entry, _TF_CACHE_MAX)
     return entry
 
 
@@ -114,6 +171,51 @@ def cached_transfer_function(grid: df.Grid, z: float, wavelength: float,
 
 
 # --------------------------------------------------------------------------
+# Executable cache (AOT compile-once layer)
+# --------------------------------------------------------------------------
+def _aval_key(args) -> tuple:
+    leaves, treedef = jax.tree.flatten(args)
+    return (treedef,) + tuple(
+        (np.shape(leaf), jnp.result_type(leaf).name,
+         bool(getattr(leaf, "weak_type", False)))
+        for leaf in leaves
+    )
+
+
+def cached_executable(static_key: tuple, fn: Callable, *args):
+    """AOT-compiled ``fn`` for the shapes/dtypes of ``args``.
+
+    Keyed by ``(static_key, input avals)`` — the compile-once layer above
+    the TF/plan caches.  Repeated emulations with identical statics and
+    input shapes reuse one XLA executable instead of re-tracing a fresh
+    closure (what every ``build_model``+``jit(apply)`` cycle used to pay).
+    """
+    key = (static_key, _aval_key(args))
+    compiled = _cache_get(_EXEC_CACHE, key, _EXEC_STATS)
+    if compiled is None:
+        compiled = jax.jit(fn).lower(*args).compile()
+        _cache_put(_EXEC_CACHE, key, compiled, _EXEC_CACHE_MAX)
+    return compiled
+
+
+# --------------------------------------------------------------------------
+# Scan tuning
+# --------------------------------------------------------------------------
+def default_scan_unroll(depth: int) -> int:
+    """Scan unroll heuristic (measured on XLA:CPU, BENCH_propagation_plan).
+
+    The rolled while-loop form costs ~4-15% steady-state vs the eager
+    unrolled HLO; unrolling by 8 recovers it (best of the depth-16 sweep,
+    ~1.06x vs eager, ahead of both the rolled loop and full unroll) while
+    the body is still traced once, so first-call stays ahead of eager too.
+    Shallower stacks unroll fully; deeper stacks keep the cap so compile
+    time stays bounded — the plan/executable caches make that first
+    compile a one-time cost per (statics, shapes) anyway.
+    """
+    return min(depth, 8)
+
+
+# --------------------------------------------------------------------------
 # Propagation plan
 # --------------------------------------------------------------------------
 class PropagationPlan:
@@ -121,9 +223,15 @@ class PropagationPlan:
 
     Covers ``depth`` modulated layers (gap i then phase plane i) plus the
     final free-space hop to the detector plane.  ``forward`` runs a slice
-    of the modulated layers as one ``lax.scan``; ``propagate_final`` runs
-    the last hop.  Phase stacks may be ``(L, N, N)`` (single channel) or
-    ``(L, C, N, N)`` (multi-channel; fields keep their channel axis).
+    of the modulated layers as one ``jax.lax.scan``; ``propagate_final``
+    runs the last hop.  Phase stacks may be ``(L, N, N)`` (single channel)
+    or ``(L, C, N, N)`` (multi-channel; fields keep their channel axis).
+
+    Transfer planes default to the plan's baked constants, but ``forward``
+    / ``propagate_final`` / ``apply`` also accept an external plane pair
+    (``tfs``) with the same ``(depth+1, ...)`` layout, possibly traced —
+    that is how ``apply_batch`` and the DSE ``emulate_batch`` path push
+    per-candidate geometries through one shared executable.
     """
 
     def __init__(
@@ -138,9 +246,13 @@ class PropagationPlan:
         device: Optional[cd.DeviceSpec] = None,
         codesign_mode: str = "none",
         use_pallas: bool = False,
+        unroll: Optional[int] = None,
+        tf_dtype: str = "float32",
     ):
         if method not in df.METHODS:
             raise ValueError(f"unknown method {method!r}")
+        if tf_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown tf_dtype {tf_dtype!r}")
         self.grid = grid
         self.gaps = tuple(float(g) for g in gaps)
         self.depth = len(self.gaps) - 1
@@ -152,14 +264,18 @@ class PropagationPlan:
         self.device = device
         self.codesign_mode = codesign_mode
         self.use_pallas = use_pallas
+        self.unroll = unroll
+        self.tf_dtype = tf_dtype
+        # split-plane pair consumed by the scan body: polar for the fused
+        # Pallas kernel, cartesian for the jnp path
+        self._plane_keys = ("theta", "amp") if use_pallas else ("hr", "hi")
         planes = [
             transfer_planes(grid, z, wavelength, method, band_limit, self.pad)
             for z in self.gaps
         ]
         # stacked numpy constants; uploaded lazily (imports stay device-free)
         self._np = {
-            k: np.stack([p[k] for p in planes]) for k in
-            (("theta", "amp") if use_pallas else ("hr", "hi"))
+            k: np.stack([p[k] for p in planes]) for k in self._plane_keys
         }
         self._jax: dict = {}
 
@@ -167,25 +283,33 @@ class PropagationPlan:
     def _const(self, name: str) -> jax.Array:
         arr = self._jax.get(name)
         if arr is None:
-            if name == "h":  # complex TF stack for the jnp path
-                arr = jnp.asarray(self._np["hr"] + 1j * self._np["hi"])
-            else:
-                arr = jnp.asarray(self._np[name])
+            arr = jnp.asarray(self._np[name])
+            if self.tf_dtype != "float32":
+                # storage dtype only: every consumer upcasts to f32 before
+                # the complex multiply (f32 accumulation)
+                arr = arr.astype(self.tf_dtype)
             # under a jit trace jnp.asarray yields a Tracer — caching it
             # across traces would leak; cache only concrete device arrays
             if not isinstance(arr, jax.core.Tracer):
                 self._jax[name] = arr
         return arr
 
+    def _tf_pair(self) -> tuple:
+        """Full (depth+1, N, N) split-plane stacks (baked constants)."""
+        return (self._const(self._plane_keys[0]),
+                self._const(self._plane_keys[1]))
+
     # --- elementwise sites ---
-    def _spectral_mul(self, s: jax.Array, h_or_polar) -> jax.Array:
-        """Multiply a spectrum (or far-field plane) by one layer's TF."""
+    def _spectral_mul(self, s: jax.Array, pair) -> jax.Array:
+        """Multiply a spectrum (or far-field plane) by one layer's TF pair."""
+        a, b = pair
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
         if not self.use_pallas:
-            return s * h_or_polar
+            return s * jax.lax.complex(a, b)  # (hr, hi)
         from repro.kernels import ops as kops
 
-        theta, amp = h_or_polar
-        tr, ti = kops.phase_tf_apply(s.real, s.imag, theta, amp)
+        tr, ti = kops.phase_tf_apply(s.real, s.imag, a, b)  # (theta, amp)
         return jax.lax.complex(tr, ti)
 
     def _modulate(self, u: jax.Array, phi: jax.Array) -> jax.Array:
@@ -198,23 +322,17 @@ class PropagationPlan:
         ur, ui = kops.phase_tf_apply(u.real, u.imag, phi, amp)
         return jax.lax.complex(ur, ui)
 
-    def _hop(self, u: jax.Array, h_or_polar) -> jax.Array:
-        """One free-space gap with a prepared TF."""
+    def _hop(self, u: jax.Array, pair) -> jax.Array:
+        """One free-space gap with a prepared TF plane pair."""
         if self.method == df.FRAUNHOFER:
             spec = jnp.fft.fftshift(jnp.fft.fft2(u), axes=(-2, -1))
-            return self._spectral_mul(spec, h_or_polar)
+            return self._spectral_mul(spec, pair)
         if self.pad:
             n = self.grid.n
             up = df.pad_field(u, n)
-            out = jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(up), h_or_polar))
+            out = jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(up), pair))
             return df.crop_field(out, n)
-        return jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(u), h_or_polar))
-
-    def _layer_tfs(self, start: int, stop: int):
-        if self.use_pallas:
-            return (self._const("theta")[start:stop],
-                    self._const("amp")[start:stop])
-        return (self._const("h")[start:stop],)
+        return jnp.fft.ifft2(self._spectral_mul(jnp.fft.fft2(u), pair))
 
     # --- codesign ---
     def _codesign_stack(self, phis: jax.Array, rngs) -> jax.Array:
@@ -239,56 +357,116 @@ class PropagationPlan:
         return jax.vmap(per_layer)(phis, rngs)
 
     # --- forward ---
+    def _scan_unroll(self, length: int) -> int:
+        unroll = (self.unroll if self.unroll is not None
+                  else default_scan_unroll(self.depth))
+        return max(1, min(int(unroll), max(length, 1)))
+
     def forward(self, phis: jax.Array, u: jax.Array, rngs=None,
-                start: int = 0, stop: Optional[int] = None) -> jax.Array:
+                start: int = 0, stop: Optional[int] = None,
+                tfs=None) -> jax.Array:
         """Scan layers [start, stop) over the field u.
 
         phis: full (L, ...) phase stack (codesign is applied to the whole
         stack so per-layer rng alignment is independent of the slice);
-        rngs: optional (L, key) stack from ``jax.random.split``.
+        rngs: optional (L, key) stack from ``jax.random.split``;
+        tfs: optional external split-plane pair, each (depth+1, ...) —
+        defaults to the plan's baked constants.
         """
         stop = self.depth if stop is None else stop
         phi_eff = self._codesign_stack(phis, rngs)
-        xs = self._layer_tfs(start, stop) + (phi_eff[start:stop],)
+        a, b = self._tf_pair() if tfs is None else tfs
+        xs = (a[start:stop], b[start:stop], phi_eff[start:stop])
 
         def body(carry, layer):
-            h_or_polar, phi = layer[:-1], layer[-1]
-            if not self.use_pallas:
-                h_or_polar = h_or_polar[0]
-            carry = self._modulate(self._hop(carry, h_or_polar), phi)
+            a_l, b_l, phi = layer
+            carry = self._modulate(self._hop(carry, (a_l, b_l)), phi)
             return carry, None
 
-        u, _ = jax.lax.scan(body, u, xs)
+        u, _ = jax.lax.scan(body, u, xs,
+                            unroll=self._scan_unroll(stop - start))
         return u
 
-    def propagate_final(self, u: jax.Array) -> jax.Array:
+    def propagate_final(self, u: jax.Array, tfs=None) -> jax.Array:
         """The last free-space hop (layer plane -> detector, no modulation)."""
-        tfs = self._layer_tfs(self.depth, self.depth + 1)
-        if self.use_pallas:
-            h_or_polar = (tfs[0][0], tfs[1][0])
-        else:
-            h_or_polar = tfs[0][0]
-        return self._hop(u, h_or_polar)
+        a, b = self._tf_pair() if tfs is None else tfs
+        return self._hop(u, (a[self.depth], b[self.depth]))
 
-    def apply(self, phis: jax.Array, u: jax.Array, rng=None) -> jax.Array:
+    def apply(self, phis: jax.Array, u: jax.Array, rng=None,
+              tfs=None) -> jax.Array:
         """Full stack: scan all layers then the final hop.
 
         rng is a single key (split into per-layer keys here, mirroring the
         eager model) or None.
         """
         rngs = jax.random.split(rng, self.depth) if rng is not None else None
-        return self.propagate_final(self.forward(phis, u, rngs))
+        return self.propagate_final(self.forward(phis, u, rngs, tfs=tfs),
+                                    tfs=tfs)
+
+    def apply_batch(self, phis: jax.Array, u: jax.Array, rng=None,
+                    tfs=None, per_candidate_inputs: bool = False) -> jax.Array:
+        """Vmapped multi-candidate forward: K phase configs, one program.
+
+        phis: (K, L, N, N) or (K, L, C, N, N) stack of K candidate phase
+        configurations; u: one shared input field broadcast to every
+        candidate, or a per-candidate (K, ...) stack when
+        ``per_candidate_inputs``; tfs: optional per-candidate plane pair
+        with leading K axis (each (K, depth+1, ...)) — the DSE path where
+        candidate *geometries* differ but ride one compiled forward;
+        rng: one key, split across candidates.  Returns the stacked
+        (K, ...) detector-plane fields.
+        """
+        u_ax = 0 if per_candidate_inputs else None
+        if rng is None:
+            if tfs is None:
+                return jax.vmap(
+                    lambda p, uu: self.apply(p, uu), in_axes=(0, u_ax)
+                )(phis, u)
+            return jax.vmap(
+                lambda p, uu, t: self.apply(p, uu, tfs=t),
+                in_axes=(0, u_ax, 0),
+            )(phis, u, tfs)
+        rngs = jax.random.split(rng, phis.shape[0])
+        if tfs is None:
+            return jax.vmap(
+                lambda p, uu, r: self.apply(p, uu, r), in_axes=(0, u_ax, 0)
+            )(phis, u, rngs)
+        return jax.vmap(
+            lambda p, uu, r, t: self.apply(p, uu, r, tfs=t),
+            in_axes=(0, u_ax, 0, 0),
+        )(phis, u, rngs, tfs)
+
+
+def device_spec_from_config(cfg) -> Optional[cd.DeviceSpec]:
+    """The (frozen, hashable) codesign device a config describes, or None."""
+    if cfg.codesign == "none":
+        return None
+    return cd.DeviceSpec(levels=cfg.device_levels,
+                         response_gamma=cfg.response_gamma)
+
+
+def plan_cache_key(cfg, gamma: float) -> tuple:
+    """Geometry tuple identifying one ``PropagationPlan`` build."""
+    dev = device_spec_from_config(cfg)
+    return (cfg.n, float(cfg.pixel_size), cfg.gap_distances(),
+            float(cfg.wavelength), cfg.approximation, bool(cfg.band_limit),
+            bool(cfg.pad), float(gamma), dev, cfg.codesign,
+            bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype)
 
 
 def plan_from_config(cfg, gamma: float) -> PropagationPlan:
-    """Build the plan the same way ``_build_layers`` builds the eager stack."""
-    dev = (
-        cd.DeviceSpec(levels=cfg.device_levels,
-                      response_gamma=cfg.response_gamma)
-        if cfg.codesign != "none"
-        else None
-    )
-    return PropagationPlan(
+    """Build (or fetch) the plan for a config — memoized per geometry tuple.
+
+    Plans are immutable once built (stacked numpy constants + lazily
+    uploaded device arrays), so every model/step/benchmark sharing a
+    geometry shares one plan instead of rebuilding and re-uploading it.
+    """
+    key = plan_cache_key(cfg, gamma)
+    plan = _cache_get(_PLAN_CACHE, key, _PLAN_STATS)
+    if plan is not None:
+        return plan
+    dev = device_spec_from_config(cfg)
+    plan = PropagationPlan(
         df.Grid(cfg.n, cfg.pixel_size),
         cfg.gap_distances(),
         cfg.wavelength,
@@ -299,4 +477,8 @@ def plan_from_config(cfg, gamma: float) -> PropagationPlan:
         device=dev,
         codesign_mode=cfg.codesign,
         use_pallas=cfg.use_pallas,
+        unroll=cfg.scan_unroll,
+        tf_dtype=cfg.tf_dtype,
     )
+    _cache_put(_PLAN_CACHE, key, plan, _PLAN_CACHE_MAX)
+    return plan

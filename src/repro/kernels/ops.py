@@ -7,6 +7,7 @@ are exercised everywhere; compiled Mosaic path on TPU).
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -194,31 +195,44 @@ _phase_tf_apply.defvjp(_phase_tf_apply_fwd, _phase_tf_apply_bwd)
 def phase_tf_apply(xr, xi, theta, amp):
     """x * amp * exp(j theta) on split planes via the fused Pallas kernel.
 
-    x: (..., H, W); theta/amp: (H, W) shared by every field, or (P, H, W)
-    with x: (..., P, H, W) so plane p modulates the fields in slot p (the
-    multi-channel DONN layout: one phase plane per optical channel).
+    x: (..., H, W); theta/amp: (H, W) shared by every field, or a plane
+    stack (*P, H, W) with x: (..., *P, H, W) so plane p modulates the
+    fields in slot p.  The plane axes may be any number of leading dims —
+    (C, H, W) is the multi-channel DONN layout (one phase plane per
+    optical channel), (K, H, W) / (K, C, H, W) are the batched
+    multi-candidate layouts (one TF/phase plane per DSE candidate [and
+    channel]); they all flatten to one plane-major axis internally.
     """
-    per_plane = theta.ndim == 3
-    squeeze = xr.ndim == 2 or (per_plane and xr.ndim == 3)
-    if squeeze:
-        xr, xi = xr[None], xi[None]
-    H, W = xr.shape[-2:]
-    if per_plane:
-        P = theta.shape[0]
-        lead = xr.shape[:-3]
-        # (..., P, H, W) -> (P, B, H, W) -> (P*B, H, W): plane-major slabs
+    pdims = theta.ndim - 2
+    H, W = theta.shape[-2:]
+    if pdims > 0:
+        pshape = theta.shape[:-2]
+        if xr.shape[xr.ndim - 2 - pdims: xr.ndim - 2] != pshape:
+            raise ValueError(
+                f"plane axes {pshape} of theta/amp must match the "
+                f"corresponding axes of x {xr.shape}"
+            )
+        squeeze = xr.ndim == pdims + 2
+        if squeeze:
+            xr, xi = xr[None], xi[None]
+        P = math.prod(pshape)
+        lead = xr.shape[: xr.ndim - pdims - 2]
+        # (..., *P, H, W) -> (P, B, H, W) -> (P*B, H, W): plane-major slabs
         xr3 = jnp.moveaxis(xr.reshape((-1, P, H, W)), 1, 0)
         xi3 = jnp.moveaxis(xi.reshape((-1, P, H, W)), 1, 0)
         B = xr3.shape[1]
         out_r, out_i = _phase_tf_apply(
             xr3.reshape((P * B, H, W)), xi3.reshape((P * B, H, W)),
-            theta, amp, B,
+            theta.reshape((P, H, W)), amp.reshape((P, H, W)), B,
         )
         out_r = jnp.moveaxis(out_r.reshape((P, B, H, W)), 0, 1)
         out_i = jnp.moveaxis(out_i.reshape((P, B, H, W)), 0, 1)
-        out_r = out_r.reshape(lead + (P, H, W))
-        out_i = out_i.reshape(lead + (P, H, W))
+        out_r = out_r.reshape(lead + pshape + (H, W))
+        out_i = out_i.reshape(lead + pshape + (H, W))
     else:
+        squeeze = xr.ndim == 2
+        if squeeze:
+            xr, xi = xr[None], xi[None]
         lead = xr.shape[:-2]
         flat_r = xr.reshape((-1, H, W))
         out_r, out_i = _phase_tf_apply(

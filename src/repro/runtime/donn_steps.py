@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import DONNConfig
-from repro.core.models import build_model
+from repro.core.models import cached_model
 from repro.core.train_utils import bce_segmentation_loss, mse_softmax_loss
 from repro.nn import ParamSpec, is_spec
 from repro.optim import AdamW
@@ -24,7 +24,7 @@ DONN_RULES = {**shd.DEFAULT_RULES, "batch": ("pod", "data", "model")}
 
 
 def donn_state_specs(cfg: DONNConfig):
-    model = build_model(cfg)
+    model = cached_model(cfg)
     pspecs = model.param_specs()
 
     def opt_spec(s):
@@ -39,7 +39,7 @@ def donn_state_specs(cfg: DONNConfig):
 
 
 def make_donn_train_step(cfg: DONNConfig, optimizer: AdamW):
-    model = build_model(cfg)
+    model = cached_model(cfg)
 
     def loss_fn(params, batch):
         if cfg.segmentation:
@@ -95,15 +95,12 @@ def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
         if not dp_axes:
             raise ValueError(f"batch {global_batch} unshardable on {mesh}")
 
+    # hoisted out of the loss closure: shard_map retraces (and fresh meshes)
+    # reuse one cached layer stack instead of rebuilding it per trace
+    model = cached_model(cfg)
+
     def local_step(state, batch):
         def loss_fn(params, b):
-            # reuse the single-device loss from make_donn_train_step
-            from repro.core.models import build_model
-            from repro.core.train_utils import (
-                bce_segmentation_loss, mse_softmax_loss,
-            )
-
-            model = build_model(cfg)
             if cfg.segmentation:
                 inten = model.apply(params, b["images"], train=True)
                 return bce_segmentation_loss(inten, b["masks"])
@@ -124,12 +121,8 @@ def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
         )
 
     batch_spec = P(dp_axes)
-    if cfg.segmentation:
-        b_specs = {"images": batch_spec, "masks": batch_spec}
-    elif cfg.channels > 1:
-        b_specs = {"images": batch_spec, "labels": batch_spec}
-    else:
-        b_specs = {"images": batch_spec, "labels": batch_spec}
+    target = "masks" if cfg.segmentation else "labels"
+    b_specs = {"images": batch_spec, target: batch_spec}
     state_specs_sm = jax.tree.map(lambda _: P(), sspecs)
     fn = jax.jit(
         shard_map(

@@ -83,6 +83,42 @@ class TestLightRidgeDSE:
         with pytest.raises(ValueError):
             dse.predict([(10e-6, 36e-6, 0.3)])  # IR wavelength
 
+    def test_explore_with_batched_emulation(self):
+        """emulate_batch verifies all top-k points in one call."""
+        pts, accs = [], []
+        for lam in (432e-9, 632e-9):
+            p, a = self._grid(lam)
+            pts += p
+            accs += a
+        dse = LightRidgeDSE(n_estimators=300).fit(pts, accs)
+        lam = 532e-9
+        cand = [(d, D) for d in np.linspace(10 * lam, 110 * lam, 11)
+                for D in np.linspace(0.1, 0.6, 11)]
+        calls = []
+
+        def emulate_batch(points):
+            calls.append(list(points))
+            return [_landscape(*p) for p in points]
+
+        res_b = dse.explore(lam, cand, emulate_batch=emulate_batch, top_k=3)
+        res_s = dse.explore(lam, cand, emulate=lambda p: _landscape(*p),
+                            top_k=3)
+        assert len(calls) == 1 and len(calls[0]) == 3
+        assert res_b.best_point == res_s.best_point
+        assert res_b.verified_acc == res_s.verified_acc
+
+    def test_explore_requires_an_emulator(self):
+        dse = LightRidgeDSE(n_estimators=10).fit(*self._grid(432e-9))
+        with pytest.raises(ValueError):
+            dse.explore(432e-9, [(36e-6, 0.3)])
+
+    def test_explore_rejects_short_batch_result(self):
+        dse = LightRidgeDSE(n_estimators=10).fit(*self._grid(432e-9))
+        cand = [(36e-6, 0.3), (30e-6, 0.25), (40e-6, 0.35)]
+        with pytest.raises(ValueError, match="scores"):
+            dse.explore(432e-9, cand, emulate_batch=lambda pts: [0.5],
+                        top_k=2)
+
     def test_sensitivity_analysis_shape(self):
         out = sensitivity_analysis(lambda p: _landscape(*p),
                                    (532e-9, 36e-6, 0.3))
@@ -94,6 +130,21 @@ class TestLightRidgeDSE:
             rows = dict(out[name])
             return rows[0.0] - min(rows[-0.05], rows[0.05])
         assert drop("unit_size") >= drop("distance") - 1e-9
+
+    def test_sensitivity_analysis_batched_matches_sequential(self):
+        best = (532e-9, 36e-6, 0.3)
+        calls = []
+
+        def emulate_batch(points):
+            calls.append(list(points))
+            return [_landscape(*p) for p in points]
+
+        out_b = sensitivity_analysis(None, best, emulate_batch=emulate_batch)
+        out_s = sensitivity_analysis(lambda p: _landscape(*p), best)
+        assert len(calls) == 1 and len(calls[0]) == 15  # 3 params x 5 deltas
+        assert out_b == out_s
+        with pytest.raises(ValueError):
+            sensitivity_analysis(None, best)
 
 
 class TestShardingDSE:
