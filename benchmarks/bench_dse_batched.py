@@ -85,21 +85,17 @@ def _bench_k(k: int, params, x, rows: list) -> dict:
         np.allclose(bat[i], seq[i], rtol=1e-5, atol=1e-5) for i in range(k)
     )
     sp = t_seq / t_bat
-    row(f"dse_batched/K{k}/sequential", t_seq * 1e6,
-        f"per_candidate={t_seq / k * 1e3:.1f}ms")
-    rows.append({"name": f"dse_batched/K{k}/sequential", "us": t_seq * 1e6,
-                 "derived": f"per_candidate={t_seq / k * 1e3:.1f}ms"})
-    row(f"dse_batched/K{k}/batched", t_bat * 1e6,
-        f"match_rtol1e-5={match},steady={t_steady * 1e3:.1f}ms")
-    rows.append({"name": f"dse_batched/K{k}/batched", "us": t_bat * 1e6,
-                 "derived": f"match_rtol1e-5={match},"
-                            f"steady={t_steady * 1e3:.1f}ms"})
-    row(f"dse_batched/K{k}/speedup", t_bat * 1e6,
-        f"batched_vs_sequential={sp:.2f}x,"
-        f"steady_vs_sequential={t_seq / t_steady:.1f}x")
-    rows.append({"name": f"dse_batched/K{k}/speedup", "us": t_bat * 1e6,
-                 "derived": f"batched_vs_sequential={sp:.2f}x,"
-                            f"steady_vs_sequential={t_seq / t_steady:.1f}x"})
+    for name, us, derived in (
+        (f"dse_batched/K{k}/sequential", t_seq * 1e6,
+         f"per_candidate={t_seq / k * 1e3:.1f}ms"),
+        (f"dse_batched/K{k}/batched", t_bat * 1e6,
+         f"match_rtol1e-5={match},steady={t_steady * 1e3:.1f}ms"),
+        (f"dse_batched/K{k}/speedup", t_bat * 1e6,
+         f"batched_vs_sequential={sp:.2f}x,"
+         f"steady_vs_sequential={t_seq / t_steady:.1f}x"),
+    ):
+        row(name, us, derived)
+        rows.append({"name": name, "us": us, "derived": derived})
     return {"speedup": round(sp, 3), "steady_speedup": round(t_seq / t_steady, 3),
             "match": bool(match)}
 

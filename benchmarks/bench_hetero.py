@@ -1,0 +1,153 @@
+"""Heterogeneous architectures: segmented-scan engine + ragged-depth DSE.
+
+Two cells:
+
+- ``hetero/forward``: a mixed-precision (256-level SLM front, 4-level
+  printed-mask back), mixed-plane-size classifier — segmented scan plan vs
+  the eager per-layer reference (first call and steady state), with the
+  eager-vs-scan agreement recorded alongside the timings.
+- ``hetero/dse_mixed_depth``: K candidates of *different depths* scored by
+  one depth-padded + masked ``emulate_batch`` call vs K sequential
+  build+jit+run cycles (the ragged-depth batched-DSE speedup), with the
+  per-candidate agreement against the sequential reference.
+
+Rows print in the standard CSV schema and persist to
+``artifacts/bench/BENCH_hetero.json``.
+
+    PYTHONPATH=src python benchmarks/bench_hetero.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, write_bench_json
+from repro.core import DONNConfig, LayerSpec, build_model, emulate_batch
+from repro.core.models import clear_emulation_caches
+
+HET_LAYERS = (
+    LayerSpec(distance=0.08, size=128, device_levels=256, codesign="qat"),
+    LayerSpec(distance=0.10, size=128, device_levels=256, codesign="qat"),
+    LayerSpec(distance=0.10, size=128, device_levels=256, codesign="qat"),
+    LayerSpec(distance=0.06, size=96, pixel_size=48e-6, device_levels=4,
+              codesign="qat"),
+    LayerSpec(distance=0.06, size=96, pixel_size=48e-6, device_levels=4,
+              codesign="qat"),
+    LayerSpec(distance=0.06, size=96, pixel_size=48e-6, device_levels=4,
+              codesign="qat"),
+)
+
+
+def _steady(fn, *args, reps: int = 3, iters: int = 10) -> float:
+    return min(
+        time_fn(fn, *args, warmup=1, iters=iters) for _ in range(reps)
+    )
+
+
+def _bench_forward(rows: list) -> dict:
+    cfg = DONNConfig(name="het", n=128, depth=len(HET_LAYERS),
+                     distance=0.10, det_size=12, layers=HET_LAYERS)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.uniform(0.0, 1.0, (8, 128, 128)), jnp.float32)
+    out = {}
+    results = {}
+    for engine in ("eager", "scan"):
+        model = build_model(dataclasses.replace(cfg, engine=engine))
+        params = model.init(jax.random.PRNGKey(0))
+        fn = jax.jit(lambda p, xb: model.apply(p, xb))
+        t0 = time.perf_counter()
+        res = fn(params, x)
+        jax.block_until_ready(res)
+        results[engine] = np.asarray(res)
+        first = (time.perf_counter() - t0) * 1e6
+        steady = _steady(fn, params, x)
+        out[engine] = {"first": first, "steady": steady}
+        name = f"hetero/forward/{engine}"
+        derived = (f"first_call={first / 1e6:.2f}s,depth={cfg.depth},"
+                   f"segments=2,sizes=128+96")
+        row(name, steady, derived)
+        rows.append({"name": name, "us": steady, "derived": derived})
+    err = float(np.max(np.abs(results["scan"] - results["eager"])
+                       / (np.abs(results["eager"]) + 1e-12)))
+    sp_first = out["eager"]["first"] / out["scan"]["first"]
+    sp_steady = out["eager"]["steady"] / out["scan"]["steady"]
+    name = "hetero/forward/speedup"
+    derived = (f"first_call_scan_vs_eager={sp_first:.2f}x,"
+               f"steady_scan_vs_eager={sp_steady:.2f}x,"
+               f"max_rel_err={err:.2e}")
+    row(name, out["scan"]["steady"], derived)
+    rows.append({"name": name, "us": out["scan"]["steady"],
+                 "derived": derived})
+    return {"first_call": round(sp_first, 3), "steady": round(sp_steady, 3),
+            "max_rel_err": err}
+
+
+def _bench_mixed_depth_dse(rows: list) -> dict:
+    depths = (4, 6, 8, 10, 12, 14, 16, 16)
+    cfgs = [
+        DONNConfig(name=f"d{i}", n=96, det_size=10, depth=d,
+                   distance=0.05 + 0.005 * (i % 3))
+        for i, d in enumerate(depths)
+    ]
+    plist = [build_model(c).init(jax.random.PRNGKey(i))
+             for i, c in enumerate(cfgs)]
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.uniform(0.0, 1.0, (8, 96, 96)), jnp.float32)
+
+    # sequential reference: one fresh build+jit+run per candidate
+    t0 = time.perf_counter()
+    seq = []
+    for c, p in zip(cfgs, plist):
+        m = build_model(c)
+        seq.append(np.asarray(jax.jit(lambda pp, xx: m.apply(pp, xx))(p, x)))
+    jax.block_until_ready(seq[-1])
+    t_seq = (time.perf_counter() - t0) * 1e6
+
+    clear_emulation_caches()
+    t0 = time.perf_counter()
+    bat = emulate_batch(cfgs, plist, x)
+    jax.block_until_ready(bat)
+    t_cold = (time.perf_counter() - t0) * 1e6
+    t_warm = _steady(lambda: emulate_batch(cfgs, plist, x), iters=5)
+
+    bat = np.asarray(bat)
+    err = max(
+        float(np.max(np.abs(bat[i] - s) / (np.abs(s) + 1e-12)))
+        for i, s in enumerate(seq)
+    )
+    out = {}
+    for tag, us in (("sequential", t_seq), ("batched_cold", t_cold),
+                    ("batched_warm", t_warm)):
+        name = f"hetero/dse_mixed_depth/{tag}"
+        derived = (f"K={len(cfgs)},depths={min(depths)}-{max(depths)},"
+                   f"max_rel_err={err:.2e}")
+        row(name, us, derived)
+        rows.append({"name": name, "us": us, "derived": derived})
+        out[tag] = us
+    name = "hetero/dse_mixed_depth/speedup"
+    derived = (f"cold={t_seq / t_cold:.2f}x,warm={t_seq / t_warm:.2f}x,"
+               f"max_rel_err={err:.2e}")
+    row(name, t_warm, derived)
+    rows.append({"name": name, "us": t_warm, "derived": derived})
+    return {"cold": round(t_seq / t_cold, 3),
+            "warm": round(t_seq / t_warm, 3), "max_rel_err": err}
+
+
+def main():
+    rows: list = []
+    speeds = {
+        "forward": _bench_forward(rows),
+        "dse_mixed_depth": _bench_mixed_depth_dse(rows),
+    }
+    write_bench_json(
+        "hetero", rows,
+        meta={"backend": jax.default_backend(), "speedups": speeds},
+    )
+
+
+if __name__ == "__main__":
+    main()

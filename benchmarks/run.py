@@ -5,13 +5,48 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
   fig8        -> bench_runtime      fig9  -> bench_kernel_breakdown
   fig10       -> bench_scaling      table4 -> bench_energy
   table5      -> bench_rgb          fig13 -> bench_segmentation
+  hetero      -> bench_hetero (segmented plans + ragged-depth DSE)
   (env)       -> bench_roofline (reads the dry-run artifacts)
+
+After the suites run, every ``artifacts/bench/BENCH_*.json`` artifact is
+rolled up into a repo-top-level ``BENCH_summary.json`` (suite -> meta/
+speedups), the per-PR perf-trajectory record CI uploads.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+
+def write_summary(started_at: float, failed: list) -> pathlib.Path:
+    """Roll artifacts/bench/BENCH_*.json metas up into ./BENCH_summary.json.
+
+    Artifacts not rewritten by this invocation (filtered-out or failed
+    suites still carry their committed numbers) are marked ``stale`` so
+    the uploaded trajectory record never presents old numbers as current.
+    """
+    from benchmarks.common import ARTIFACTS
+
+    root = ARTIFACTS.parent.parent
+    summary = {"_failed_suites": sorted(failed)} if failed else {}
+    for path in sorted(ARTIFACTS.glob("BENCH_*.json")):
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, ValueError):
+            continue
+        summary[data.get("suite", path.stem)] = {
+            "meta": data.get("meta", {}),
+            "rows": len(data.get("rows", [])),
+            "artifact": str(path.relative_to(root)),
+            "stale": path.stat().st_mtime < started_at,
+        }
+    out = root / "BENCH_summary.json"
+    out.write_text(json.dumps(summary, indent=2, sort_keys=True))
+    print(f"# wrote {out}", flush=True)
+    return out
 
 
 def main() -> None:
@@ -19,6 +54,7 @@ def main() -> None:
         bench_dse,
         bench_dse_batched,
         bench_energy,
+        bench_hetero,
         bench_kernel_breakdown,
         bench_propagation_plan,
         bench_regularization,
@@ -35,6 +71,7 @@ def main() -> None:
         ("fig9_kernel_breakdown", bench_kernel_breakdown.main),
         ("propagation_plan", bench_propagation_plan.main),
         ("dse_batched", bench_dse_batched.main),
+        ("hetero", bench_hetero.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),
@@ -43,7 +80,8 @@ def main() -> None:
         ("fig13_segmentation", bench_segmentation.main),
         ("roofline", bench_roofline.main),
     ]
-    failures = 0
+    started_at = time.time()
+    failed: list = []
     for name, fn in suites:
         if only and only not in name:
             continue
@@ -52,10 +90,11 @@ def main() -> None:
         try:
             fn()
         except Exception:  # noqa: BLE001
-            failures += 1
+            failed.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
-    if failures:
+    write_summary(started_at, failed)
+    if failed:
         sys.exit(1)
 
 

@@ -1,5 +1,5 @@
 """LightRidge core: the paper's contribution as composable JAX modules."""
-from repro.core.config import DONNConfig
+from repro.core.config import DONNConfig, LayerSpec
 from repro.core.diffraction import (
     FRAUNHOFER,
     FRESNEL,
@@ -25,6 +25,7 @@ from repro.core.models import (
 )
 from repro.core.propagation import (
     PropagationPlan,
+    SegmentedPlan,
     clear_plan_cache,
     clear_tf_cache,
     plan_cache_stats,
@@ -33,7 +34,8 @@ from repro.core.propagation import (
 )
 
 __all__ = [
-    "DONNConfig", "FRAUNHOFER", "FRESNEL", "RS", "Grid", "fraunhofer",
+    "DONNConfig", "LayerSpec", "SegmentedPlan",
+    "FRAUNHOFER", "FRESNEL", "RS", "Grid", "fraunhofer",
     "intensity", "propagate", "propagate_tf", "transfer_function",
     "Laser", "data_to_cplex", "Detector", "DiffractiveLayer",
     "DONN", "MultiChannelDONN", "SegmentationDONN", "build_model",

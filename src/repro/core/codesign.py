@@ -42,6 +42,33 @@ class DeviceSpec:
         return (self.phase_range * v**self.response_gamma).astype(np.float32)
 
 
+def slm(levels: int = 256, response_gamma: float = 1.0,
+        name: str = "slm-lc2012") -> DeviceSpec:
+    """High-precision spatial light modulator preset (visible-range SLM)."""
+    return DeviceSpec(levels=levels, response_gamma=response_gamma, name=name)
+
+
+def printed_mask(levels: int = 4, response_gamma: float = 1.0,
+                 name: str = "printed-mask") -> DeviceSpec:
+    """Low-precision 3D-printed THz mask preset (few thickness levels)."""
+    return DeviceSpec(levels=levels, response_gamma=response_gamma, name=name)
+
+
+def device_for_layer(codesign: str, levels: int,
+                     response_gamma: float = 1.0) -> Optional[DeviceSpec]:
+    """The DeviceSpec one layer's codesign knobs describe, or None.
+
+    The per-layer resolver behind heterogeneous stacks: each layer of a
+    mixed-device DONN (e.g. 256-level SLM front layers feeding 4-level
+    printed-mask back layers) maps its own (codesign mode, levels,
+    response) triple to a device, and all layers train jointly — the
+    quantizers differ per layer but share one backward pass.
+    """
+    if codesign == "none":
+        return None
+    return DeviceSpec(levels=int(levels), response_gamma=float(response_gamma))
+
+
 def wrap_phase(phi: jax.Array, phase_range: float = TWO_PI) -> jax.Array:
     return jnp.mod(phi, phase_range)
 

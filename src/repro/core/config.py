@@ -4,6 +4,65 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+_METHODS = ("rs", "fresnel", "fraunhofer")
+_CODESIGN_MODES = ("none", "qat", "gumbel", "gumbel_hard", "ptq")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Per-layer architecture description (heterogeneous DONN stacks).
+
+    Every field except ``distance`` may be ``None``, meaning "inherit the
+    config-level scalar" — a ``DONNConfig`` whose ``layers`` all resolve to
+    the config scalars is *canonically identical* to the uniform config
+    (same plan-cache key, same compiled program).
+
+    - ``distance``: propagation gap *into* this layer (from the previous
+      plane — the source plane for layer 0) [m].
+    - ``approximation``: rs | fresnel | fraunhofer.
+    - ``codesign`` / ``device_levels`` / ``response_gamma``: per-layer
+      fabrication device (e.g. a 256-level SLM front stack driving 4-level
+      printed-mask back layers, trained jointly).
+    - ``size`` / ``pixel_size``: per-layer plane geometry; fields are
+      resampled between planes whose grids differ.
+    """
+
+    distance: float = 0.30
+    approximation: Optional[str] = None
+    codesign: Optional[str] = None
+    device_levels: Optional[int] = None
+    response_gamma: Optional[float] = None
+    size: Optional[int] = None
+    pixel_size: Optional[float] = None
+
+    def __post_init__(self):
+        if self.approximation is not None and self.approximation not in _METHODS:
+            raise ValueError(
+                f"LayerSpec.approximation must be one of {_METHODS}, "
+                f"got {self.approximation!r}"
+            )
+        if self.codesign is not None and self.codesign not in _CODESIGN_MODES:
+            raise ValueError(
+                f"LayerSpec.codesign must be one of {_CODESIGN_MODES}, "
+                f"got {self.codesign!r}"
+            )
+
+    def resolve(self, cfg: "DONNConfig") -> "LayerSpec":
+        """Fill inherited (None) fields from the config scalars."""
+        return LayerSpec(
+            distance=float(self.distance),
+            approximation=self.approximation or cfg.approximation,
+            codesign=self.codesign if self.codesign is not None else cfg.codesign,
+            device_levels=(self.device_levels if self.device_levels is not None
+                           else cfg.device_levels),
+            response_gamma=(float(self.response_gamma)
+                            if self.response_gamma is not None
+                            else float(cfg.response_gamma)),
+            size=self.size if self.size is not None else cfg.n,
+            pixel_size=(float(self.pixel_size) if self.pixel_size is not None
+                        else float(cfg.pixel_size)),
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class DONNConfig:
@@ -12,6 +71,14 @@ class DONNConfig:
     Mirrors the knobs exposed by the LightRidge DSL (Table 2): system size,
     diffraction unit size, wavelength, per-gap distances, approximation
     method, device precision, detector geometry, codesign mode.
+
+    Heterogeneous stacks are described by ``layers`` — one ``LayerSpec``
+    per diffractive layer, each overriding the config scalars per layer
+    (plane size, pixel size, approximation, codesign device, distance).
+    With ``layers`` set, ``distance`` is the final layer -> detector gap
+    and ``distances`` must be None.  A ``layers`` tuple that resolves to
+    the uniform scalars canonicalizes back to the scalar form
+    (``canonical()``) and shares its plan cache entry.
     """
 
     name: str = "donn"
@@ -39,6 +106,8 @@ class DONNConfig:
     segmentation: bool = False
     skip_from: Optional[int] = None  # optical-skip source layer index
     layer_norm: bool = False  # train-time LN before detector (segmentation)
+    # --- heterogeneous per-layer architecture ---
+    layers: Optional[Sequence[LayerSpec]] = None  # per-layer overrides
     # --- runtime ---
     use_pallas: bool = False  # Pallas kernels for modulation/readout
     engine: str = "scan"  # "scan" (fused PropagationPlan) | "eager" (per-layer loop)
@@ -61,14 +130,87 @@ class DONNConfig:
             )
         if self.scan_unroll is not None and self.scan_unroll < 1:
             raise ValueError("scan_unroll must be >= 1")
+        if self.distances is not None and len(self.distances) != self.depth + 1:
+            raise ValueError(
+                f"distances must have depth+1={self.depth + 1} entries "
+                f"(source->L1, inter-layer gaps, L_last->detector); got "
+                f"{len(self.distances)}"
+            )
+        if self.layers is not None:
+            if self.distances is not None:
+                raise ValueError(
+                    "layers and distances are mutually exclusive: per-layer "
+                    "gaps live in LayerSpec.distance and `distance` is the "
+                    "final layer->detector gap"
+                )
+            if len(self.layers) != self.depth:
+                raise ValueError(
+                    f"layers must have depth={self.depth} entries, got "
+                    f"{len(self.layers)}"
+                )
+            if not all(isinstance(l, LayerSpec) for l in self.layers):
+                raise ValueError("layers entries must be LayerSpec instances")
+            # normalize to a tuple so frozen configs hash/compare by value
+            object.__setattr__(self, "layers", tuple(self.layers))
 
     def gap_distances(self) -> tuple:
         """depth+1 propagation gaps: source->L1, L_i->L_{i+1}, L_last->det."""
+        if self.layers is not None:
+            return tuple(float(l.distance) for l in self.layers) + (
+                float(self.distance),
+            )
         if self.distances is not None:
-            ds = tuple(float(d) for d in self.distances)
-            if len(ds) != self.depth + 1:
-                raise ValueError(
-                    f"distances must have depth+1={self.depth + 1} entries"
-                )
-            return ds
+            return tuple(float(d) for d in self.distances)
         return (float(self.distance),) * (self.depth + 1)
+
+    def resolved_layers(self) -> tuple:
+        """Fully-resolved per-layer specs (inherits filled from scalars)."""
+        gaps = self.gap_distances()
+        if self.layers is not None:
+            return tuple(l.resolve(self) for l in self.layers)
+        return tuple(
+            LayerSpec(distance=gaps[i]).resolve(self) for i in range(self.depth)
+        )
+
+    def canonical(self) -> "DONNConfig":
+        """Normal form: uniform ``layers`` fold back into the scalar fields.
+
+        A config whose per-layer specs all resolve to the config scalars is
+        the *same architecture* as the scalar config — ``canonical()`` maps
+        both spellings to one value so plan/model/executable caches key
+        identically.  Heterogeneous configs normalize their ``layers`` to
+        the fully-resolved form (inherited Nones filled in).
+        """
+        if self.layers is None:
+            return self
+        resolved = self.resolved_layers()
+        common = dataclasses.replace(resolved[0], distance=0.0)
+        if (all(dataclasses.replace(l, distance=0.0) == common
+                for l in resolved)
+                and common.size == self.n
+                and common.pixel_size == float(self.pixel_size)):
+            # every layer equals every other (up to distance) and lives on
+            # the detector/system grid: this IS the scalar architecture —
+            # fold onto the layers' common values (not the possibly
+            # different inheritance scalars)
+            return dataclasses.replace(
+                self,
+                layers=None,
+                distances=self.gap_distances(),
+                approximation=common.approximation,
+                codesign=common.codesign,
+                device_levels=common.device_levels,
+                response_gamma=common.response_gamma,
+            )
+        # once layers are fully resolved, the per-layer inheritance scalars
+        # are shadowed — reset them so equivalent spellings key identically
+        shadowed = dict(approximation="rs", codesign="none",
+                        device_levels=256, response_gamma=1.0)
+        if resolved == self.layers and all(
+            getattr(self, k) == v for k, v in shadowed.items()
+        ):
+            return self
+        return dataclasses.replace(self, layers=resolved, **shadowed)
+
+    def is_heterogeneous(self) -> bool:
+        return self.canonical().layers is not None

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import lru_get, lru_put
+
 RS = "rs"
 FRESNEL = "fresnel"
 FRAUNHOFER = "fraunhofer"
@@ -168,6 +170,52 @@ def fraunhofer(
     """
     spec = jnp.fft.fftshift(jnp.fft.fft2(u), axes=(-2, -1))
     return spec * jnp.asarray(fraunhofer_quad(grid, z, wavelength))
+
+
+# bounded LRU, same shared discipline as the propagation TF/plan caches
+_RESAMPLE_CACHE: dict = {}
+_RESAMPLE_CACHE_MAX = 256
+
+
+def resample_matrix(grid_in: Grid, grid_out: Grid) -> np.ndarray:
+    """Bilinear field-resampling operator between two plane grids.
+
+    Returns the (n_out, n_in) separable 1-D interpolation matrix ``A`` such
+    that ``u_out = A @ u_in @ A.T`` resamples a field over *physical*
+    coordinates (both grids are centered; samples falling outside the input
+    aperture read zero).  For equal pixel sizes *and* matching sample
+    alignment (n_in and n_out of the same parity, so the centered grids
+    coincide) the matrix degenerates to an exact centered crop / zero-pad
+    (0/1 entries) and aperture-only stitches are lossless; an odd<->even
+    stitch at equal pitch interpolates half-sample-shifted values instead.
+    Static geometry => numpy constant (cached process-wide LRU, embedded
+    into jit programs like the TF planes).
+    """
+    key = (grid_in.n, float(grid_in.pixel_size),
+           grid_out.n, float(grid_out.pixel_size))
+    hit = lru_get(_RESAMPLE_CACHE, key)
+    if hit is not None:
+        return hit
+    # output sample positions in input index space
+    t = (grid_out.coords() / grid_in.pixel_size) + (grid_in.n - 1) / 2.0
+    i0 = np.floor(t).astype(np.int64)
+    w = (t - i0).astype(np.float64)
+    A = np.zeros((grid_out.n, grid_in.n), np.float64)
+    rows = np.arange(grid_out.n)
+    for idx, wt in ((i0, 1.0 - w), (i0 + 1, w)):
+        ok = (idx >= 0) & (idx < grid_in.n)
+        A[rows[ok], idx[ok]] += wt[ok]
+    A = A.astype(np.float32)
+    lru_put(_RESAMPLE_CACHE, key, A, _RESAMPLE_CACHE_MAX)
+    return A
+
+
+def resample_field(u: jax.Array, grid_in: Grid, grid_out: Grid) -> jax.Array:
+    """Resample field(s) (..., n_in, n_in) onto ``grid_out`` (bilinear)."""
+    if grid_in == grid_out:
+        return u
+    A = jnp.asarray(resample_matrix(grid_in, grid_out))
+    return jnp.einsum("oi,...ij,pj->...op", A, u, A)
 
 
 def fresnel_number(grid: Grid, z: float, wavelength: float) -> float:

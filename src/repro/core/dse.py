@@ -151,12 +151,23 @@ class LightRidgeDSE:
         self._lams: list = []
 
     @staticmethod
-    def _features(lam, d, D):
-        # physics-aware features: raw + the Fresnel-number-ish couplings
-        return [lam * 1e9, d * 1e6, D, d / lam, d * d / (lam * D)]
+    def _features(lam, d, D, depth=None):
+        # physics-aware features: raw + the Fresnel-number-ish couplings;
+        # optional ragged-depth axis for architecture-depth exploration
+        base = [lam * 1e9, d * 1e6, D, d / lam, d * d / (lam * D)]
+        if depth is not None:
+            base.append(float(depth))
+        return base
 
     def fit(self, points: Sequence[tuple], accs: Sequence[float]):
-        """points: iterable of (wavelength, unit_size, distance)."""
+        """points: iterable of (wavelength, unit_size, distance[, depth]).
+
+        All points must share one arity — either the classic 3-tuple grid
+        or the depth-extended 4-tuple grid (mixed arities would silently
+        misalign the feature matrix).
+        """
+        if len({len(p) for p in points}) > 1:
+            raise ValueError("mix of 3- and 4-tuple DSE points")
         X = np.array([self._features(*p) for p in points])
         self.model.fit(X, np.asarray(accs))
         self._lams = sorted({p[0] for p in points})
@@ -180,15 +191,19 @@ class LightRidgeDSE:
                 emulate_batch: Optional[Callable] = None) -> DSEResult:
         """Predict the landscape at ``lam``; emulate only the top_k points.
 
-        Verification runs through ``emulate`` (one point -> one score,
-        called top_k times) or — preferred — ``emulate_batch`` (all top_k
-        points -> scores in one call, e.g. built on
-        ``repro.core.models.emulate_batch`` so the candidates share one
-        compiled vmapped forward instead of K trace+compile+run cycles).
+        candidates: (unit_size, distance) pairs, or — for architecture
+        exploration over ragged stack depths — (unit_size, distance,
+        depth) triples.  Verification runs through ``emulate`` (one point
+        -> one score, called top_k times) or — preferred —
+        ``emulate_batch`` (all top_k points -> scores in one call, e.g.
+        built on ``repro.core.models.emulate_batch`` so the candidates
+        share one compiled vmapped forward instead of K
+        trace+compile+run cycles; with depth-extended candidates the
+        shared program depth-pads + masks the shallower stacks).
         """
         if emulate is None and emulate_batch is None:
             raise ValueError("explore needs emulate or emulate_batch")
-        pts = [(lam, d, D) for (d, D) in candidates]
+        pts = [(lam,) + tuple(c) for c in candidates]
         preds = self.predict(pts)
         order = np.argsort(-preds)[:top_k]
         if emulate_batch is not None:
@@ -204,9 +219,12 @@ class LightRidgeDSE:
         for i, acc in zip(order, accs):
             if acc > best_acc:
                 best_acc, best_pt, best_pred = acc, pts[i], preds[i]
+        best_point = {"wavelength": best_pt[0], "unit_size": best_pt[1],
+                      "distance": best_pt[2]}
+        if len(best_pt) > 3:
+            best_point["depth"] = best_pt[3]
         return DSEResult(
-            best_point={"wavelength": best_pt[0], "unit_size": best_pt[1],
-                        "distance": best_pt[2]},
+            best_point=best_point,
             predicted_acc=float(best_pred),
             verified_acc=float(best_acc),
             emulations_used=int(top_k),

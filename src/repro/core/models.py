@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codesign as cd
 from repro.core import diffraction as df
 from repro.core import propagation as pp
+from repro.core.cache import lru_get, lru_put
 from repro.core.config import DONNConfig
 from repro.core.laser import Laser, data_to_cplex
 from repro.core.layers import Detector, DiffractiveLayer
@@ -25,31 +27,37 @@ from repro.core.propagation import plan_from_config
 from repro.nn import ParamSpec, init_params
 
 
-def _build_layers(cfg: DONNConfig, grid: df.Grid, gamma: float):
-    dev = pp.device_spec_from_config(cfg)
-    gaps = cfg.gap_distances()
+def _build_layers(cfg: DONNConfig, gamma: float):
+    """Eager per-layer stack from the (possibly heterogeneous) config.
+
+    Each layer owns its *own* grid / approximation / codesign device
+    (resolved from ``cfg.layers`` or the uniform scalars); the final
+    free-space hop to the detector runs on the last layer's grid.
+    """
+    specs = cfg.resolved_layers()
     layers = []
-    for i in range(cfg.depth):
+    for s in specs:
         layers.append(
             DiffractiveLayer(
-                grid,
-                gaps[i],
+                df.Grid(s.size, s.pixel_size),
+                s.distance,
                 cfg.wavelength,
-                method=cfg.approximation,
+                method=s.approximation,
                 band_limit=cfg.band_limit,
                 pad=cfg.pad,
-                device=dev,
-                codesign_mode=cfg.codesign,
+                device=cd.device_for_layer(s.codesign, s.device_levels,
+                                           s.response_gamma),
+                codesign_mode=s.codesign,
                 gamma=gamma,
                 use_pallas=cfg.use_pallas,
             )
         )
     # final free-space hop: last layer -> detector plane (no modulation)
     final = DiffractiveLayer(
-        grid,
-        gaps[-1],
+        layers[-1].grid,
+        cfg.gap_distances()[-1],
         cfg.wavelength,
-        method=cfg.approximation,
+        method=specs[-1].approximation,
         band_limit=cfg.band_limit,
         pad=cfg.pad,
         gamma=1.0,
@@ -65,10 +73,11 @@ class DONN:
         if cfg.channels != 1:
             raise ValueError("use MultiChannelDONN for channels > 1")
         self.cfg = cfg
-        self.grid = df.Grid(cfg.n, cfg.pixel_size)
+        self.grid = df.Grid(cfg.n, cfg.pixel_size)  # detector/system grid
         self.laser = laser or Laser(wavelength=cfg.wavelength)
         self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
-        self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self.layers, self.final = _build_layers(cfg, self.gamma)
+        self.in_grid = self.layers[0].grid  # source plane (first layer size)
         self._plan = None  # built on first scan-path use
         self.detector = Detector(
             self.grid,
@@ -77,7 +86,7 @@ class DONN:
             cfg.detector_layout,
             use_pallas=cfg.use_pallas,
         )
-        self.source = self.laser.field(self.grid)  # (n, n) complex64 const
+        self.source = self.laser.field(self.in_grid)  # (n, n) complex64 const
 
     @property
     def plan(self):
@@ -99,7 +108,7 @@ class DONN:
 
     # --- forward ---
     def encode(self, x: jax.Array) -> jax.Array:
-        u = data_to_cplex(x, self.cfg.n)
+        u = data_to_cplex(x, self.in_grid.n)
         return u * jnp.asarray(self.source)
 
     def fields(self, params, x, rng: Optional[jax.Array] = None):
@@ -110,16 +119,22 @@ class DONN:
             jax.random.split(rng, len(self.layers)) if rng is not None else
             [None] * len(self.layers)
         )
+        cur = self.in_grid
         for i, layer in enumerate(self.layers):
+            u = df.resample_field(u, cur, layer.grid)  # no-op on equal grids
             u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
+            cur = layer.grid
             out.append(u)
         u = self.final.propagate(u)
+        u = df.resample_field(u, self.final.grid, self.grid)
         out.append(u)
         return out
 
-    def stacked_phases(self, params) -> jax.Array:
-        return jnp.stack(
-            [params["phase"][f"layer_{i}"] for i in range(len(self.layers))]
+    def stacked_phases(self, params):
+        """Phase stack in the plan's layout: one (L, N, N) array for
+        uniform stacks, a per-segment pytree for heterogeneous ones."""
+        return self.plan.stack_phases(
+            params["phase"][f"layer_{i}"] for i in range(len(self.layers))
         )
 
     def apply(self, params, x, rng: Optional[jax.Array] = None) -> jax.Array:
@@ -183,11 +198,12 @@ class MultiChannelDONN:
             return jnp.einsum("...hw,chw->...c", total, masks)
         # batched plan path: all channels propagate as one (..., C, N, N)
         # tensor through shared kernels (the TFs are channel-independent;
-        # the (L, C, N, N) phase stack rides the scan).
-        phis = jnp.stack(
-            [params["phase"][f"layer_{i}"] for i in range(len(cm.layers))]
+        # the (L, C, N, N) phase stack rides the scan — per segment for
+        # heterogeneous stacks).
+        phis = cm.plan.stack_phases(
+            params["phase"][f"layer_{i}"] for i in range(len(cm.layers))
         )
-        u = data_to_cplex(x, self.cfg.n) * jnp.asarray(cm.source)
+        u = data_to_cplex(x, cm.in_grid.n) * jnp.asarray(cm.source)
         u = cm.plan.apply(phis, u, rng)
         masks = jnp.asarray(cm.detector.masks)
         if self.cfg.use_pallas:
@@ -211,25 +227,28 @@ class SegmentationDONN:
 
     def __init__(self, cfg: DONNConfig, laser: Optional[Laser] = None):
         self.cfg = cfg
-        self.grid = df.Grid(cfg.n, cfg.pixel_size)
+        self.grid = df.Grid(cfg.n, cfg.pixel_size)  # detector/system grid
         self.laser = laser or Laser(wavelength=cfg.wavelength)
         self.gamma = 1.0 if cfg.gamma is None else float(cfg.gamma)
-        self.layers, self.final = _build_layers(cfg, self.grid, self.gamma)
+        self.layers, self.final = _build_layers(cfg, self.gamma)
+        self.in_grid = self.layers[0].grid
         self._plan = None  # built on first scan-path use
         self.skip_from = cfg.skip_from
         if self.skip_from is not None:
-            # skip hop covers the remaining distance to the detector plane
+            # skip hop covers the remaining distance to the detector plane,
+            # computed on the skip plane's own grid
             gaps = cfg.gap_distances()
             z_skip = float(sum(gaps[self.skip_from + 1 :]))
+            skip_grid = self.layers[self.skip_from].grid
             self.skip_hop = DiffractiveLayer(
-                self.grid,
+                skip_grid,
                 z_skip,
                 cfg.wavelength,
-                method=cfg.approximation,
+                method=cfg.resolved_layers()[self.skip_from].approximation,
                 band_limit=cfg.band_limit,
                 pad=cfg.pad,
             )
-        self.source = self.laser.field(self.grid)
+        self.source = self.laser.field(self.in_grid)
 
     @property
     def plan(self):
@@ -252,22 +271,26 @@ class SegmentationDONN:
         self, params, x, rng: Optional[jax.Array] = None, train: bool = False
     ) -> jax.Array:
         """Images (..., h, w) -> per-pixel intensity map (..., n, n)."""
-        u = data_to_cplex(x, self.cfg.n) * jnp.asarray(self.source)
+        u = data_to_cplex(x, self.in_grid.n) * jnp.asarray(self.source)
         skip_u = None
         if self.cfg.engine == "eager":
             rngs = (
                 jax.random.split(rng, len(self.layers)) if rng is not None
                 else [None] * len(self.layers)
             )
+            cur = self.in_grid
             for i, layer in enumerate(self.layers):
+                u = df.resample_field(u, cur, layer.grid)
                 u = layer(params["phase"][f"layer_{i}"], u, rngs[i])
+                cur = layer.grid
                 if self.skip_from is not None and i == self.skip_from:
                     skip_u = u
             u = self.final.propagate(u)
+            u = df.resample_field(u, self.final.grid, self.grid)
         else:
-            phis = jnp.stack(
-                [params["phase"][f"layer_{i}"]
-                 for i in range(len(self.layers))]
+            phis = self.plan.stack_phases(
+                params["phase"][f"layer_{i}"]
+                for i in range(len(self.layers))
             )
             rngs = (
                 jax.random.split(rng, len(self.layers)) if rng is not None
@@ -283,9 +306,10 @@ class SegmentationDONN:
                                       start=self.skip_from + 1)
             u = self.plan.propagate_final(u)
         if skip_u is not None:
-            u = (u + self.skip_hop.propagate(skip_u)) / jnp.sqrt(2.0).astype(
-                jnp.complex64
-            )
+            # beam-splitter recombination on the detector grid
+            sk = self.skip_hop.propagate(skip_u)
+            sk = df.resample_field(sk, self.skip_hop.grid, self.grid)
+            u = (u + sk) / jnp.sqrt(2.0).astype(jnp.complex64)
         inten = df.intensity(u)
         if train and self.cfg.layer_norm:
             mean = jnp.mean(inten, axis=(-2, -1), keepdims=True)
@@ -311,22 +335,32 @@ _MODEL_CACHE_MAX = 64
 _MODEL_STATS = {"hits": 0, "misses": 0}
 
 # geometry knobs free to vary across one emulate_batch candidate set; every
-# other config field is an architecture static shared by the batch
+# other config field is an architecture static shared by the batch.  depth
+# rides along via depth-padded + masked candidate stacks.
 _GEOMETRY_FIELDS = ("name", "wavelength", "pixel_size", "distance",
-                    "distances")
+                    "distances", "depth")
 
 
 def config_static_key(cfg: DONNConfig) -> tuple:
-    """Hashable config key (normalizes distances, drops the cosmetic name).
+    """Hashable config key (canonicalized, drops the cosmetic name).
 
     ``name`` never reaches the compiled program, so configs identical up
     to it share models and executables — a DSE sweep naming its candidates
-    uniquely still compiles once per geometry.
+    uniquely still compiles once per geometry.  The key is built on the
+    *canonical* config (``DONNConfig.canonical``): uniform architectures
+    spelled via ``layers`` collapse onto the scalar spelling, ``distance``
+    / ``distances`` normalize through ``gap_distances()``, and surviving
+    heterogeneous ``layers`` flatten to hashable per-layer tuples.
     """
+    cfg = cfg.canonical()
     d = dataclasses.asdict(cfg)
     d.pop("name")
-    if d["distances"] is not None:
-        d["distances"] = tuple(float(x) for x in d["distances"])
+    d["distances"] = cfg.gap_distances()
+    d["distance"] = 0.0  # folded into the normalized distances
+    if d["layers"] is not None:
+        d["layers"] = tuple(
+            tuple(sorted(l.items())) for l in d["layers"]
+        )
     return tuple(sorted(d.items()))
 
 
@@ -356,10 +390,10 @@ def cached_model(cfg: DONNConfig, laser: Optional[Laser] = None):
     if laser is not None:
         return build_model(cfg, laser)
     key = config_static_key(cfg)
-    model = pp._cache_get(_MODEL_CACHE, key, _MODEL_STATS)
+    model = lru_get(_MODEL_CACHE, key, _MODEL_STATS)
     if model is None:
         model = build_model(cfg)
-        pp._cache_put(_MODEL_CACHE, key, model, _MODEL_CACHE_MAX)
+        lru_put(_MODEL_CACHE, key, model, _MODEL_CACHE_MAX)
     return model
 
 
@@ -391,10 +425,31 @@ def cached_apply(cfg: DONNConfig):
     return run
 
 
-def _stack_phases(params, depth: int) -> jax.Array:
-    return jnp.stack(
+def _stack_phases(params, depth: int, pad_to: Optional[int] = None) -> jax.Array:
+    """(L, ...) phase stack; zero-padded along L to ``pad_to`` if given."""
+    phis = jnp.stack(
         [params["phase"][f"layer_{i}"] for i in range(depth)]
     )
+    if pad_to is not None and pad_to > depth:
+        phis = jnp.pad(
+            phis, [(0, pad_to - depth)] + [(0, 0)] * (phis.ndim - 1)
+        )
+    return phis
+
+
+def _pad_planes(planes: np.ndarray, depth: int, pad_to: int) -> np.ndarray:
+    """Pad a (depth+1, ...) TF-plane stack to (pad_to+1, ...).
+
+    Rows [0, depth) are the real layer gaps, row ``depth`` the final hop.
+    Dummy rows (copies of the final-hop plane — any finite plane works,
+    the layer mask makes them identity hops) are inserted *between* the
+    layer gaps and the final hop so the shared scan-plus-final program
+    reads every candidate's final plane at the same index ``pad_to``.
+    """
+    if depth == pad_to:
+        return planes
+    dummy = np.repeat(planes[depth:depth + 1], pad_to - depth, axis=0)
+    return np.concatenate([planes[:depth], dummy, planes[depth:]], axis=0)
 
 
 # candidate-set geometry -> stacked device inputs (TF planes, sources, skip
@@ -406,17 +461,28 @@ _BATCH_INPUT_STATS = {"hits": 0, "misses": 0}
 
 
 def _batched_inputs(cfgs, base, gamma: float, template, has_skip: bool):
-    """Stacked (K, ...) transfer planes, sources and skip planes (memoized)."""
+    """Stacked (K, ...) transfer planes, sources and skip planes (memoized).
+
+    Candidates of unequal depth are padded to the deepest one
+    (``template.depth``): dummy gap planes fill the tail of each TF stack
+    (masked to identity hops by the caller's layer mask) and every
+    candidate's final hop lands at the shared index ``template.depth``.
+    """
     key = ("emulate_inputs",
            tuple(pp.plan_cache_key(c, gamma) for c in cfgs),
            base.skip_from if has_skip else None)
-    hit = pp._cache_get(_BATCH_INPUT_CACHE, key, _BATCH_INPUT_STATS)
+    hit = lru_get(_BATCH_INPUT_CACHE, key, _BATCH_INPUT_STATS)
     if hit is not None:
         return hit
     plans = [pp.plan_from_config(c, gamma) for c in cfgs]
     k0, k1 = template._plane_keys
-    tf_a = jnp.asarray(np.stack([p._np[k0] for p in plans]))
-    tf_b = jnp.asarray(np.stack([p._np[k1] for p in plans]))
+    L = template.depth
+    tf_a = jnp.asarray(
+        np.stack([_pad_planes(p._np[k0], p.depth, L) for p in plans])
+    )
+    tf_b = jnp.asarray(
+        np.stack([_pad_planes(p._np[k1], p.depth, L) for p in plans])
+    )
     if base.tf_dtype != "float32":
         tf_a = tf_a.astype(base.tf_dtype)
         tf_b = tf_b.astype(base.tf_dtype)
@@ -440,7 +506,7 @@ def _batched_inputs(cfgs, base, gamma: float, template, has_skip: bool):
         skip_pair = (jnp.asarray(np.stack([p[k0] for p in sk])),
                      jnp.asarray(np.stack([p[k1] for p in sk])))
     entry = (tf_a, tf_b, sources, skip_pair)
-    pp._cache_put(_BATCH_INPUT_CACHE, key, entry, _BATCH_INPUT_CACHE_MAX)
+    lru_put(_BATCH_INPUT_CACHE, key, entry, _BATCH_INPUT_CACHE_MAX)
     return entry
 
 
@@ -449,47 +515,79 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
     """Emulate K candidate DONN configs in one compiled, vmapped forward.
 
     The DSE verification primitive: all cfgs must share architecture
-    statics (n, depth, channels, detector geometry, engine flags), while
-    per-candidate *geometry* — wavelength, pixel_size, distance(s) — is
-    free.  Per-candidate transfer planes and source fields enter the
-    compiled program as traced inputs (not baked constants), so every
-    candidate set with the same statics and shapes reuses one cached
+    statics (n, channels, detector geometry, engine flags), while
+    per-candidate *geometry* — wavelength, pixel_size, distance(s), and
+    **depth** — is free.  Per-candidate transfer planes and source fields
+    enter the compiled program as traced inputs (not baked constants), so
+    every candidate set with the same statics and shapes reuses one cached
     executable: K emulations cost one trace+compile plus one device call,
     instead of K sequential ``build_model`` + ``jit(apply)`` cycles.
 
+    Ragged-depth candidate sets are depth-padded to the deepest candidate
+    and masked: padded layers are identity hops inside the shared scan, so
+    a 2-layer and a 5-layer architecture score in the *same* device call
+    (per-candidate params required; with rng-driven codesign the per-layer
+    key split uses the padded depth, so stochastic modes are deterministic
+    but not bitwise-aligned with a sequential per-depth emulation).
+
     params: one pytree shared by every candidate, or a sequence of K
-    pytrees.  x: one shared input batch.  rng: one key, split across
-    candidates (candidate i sees ``jax.random.split(rng, K)[i]``).
+    pytrees (required when depths differ).  x: one shared input batch.
+    rng: one key, split across candidates (candidate i sees
+    ``jax.random.split(rng, K)[i]``).
 
     Returns the stacked (K, ...) outputs of ``build_model(cfg).apply`` per
     candidate: per-class intensities for classifiers, intensity maps for
     segmentation (``train=True`` applies the train-time layer norm).
     """
-    cfgs = list(cfgs)
+    cfgs = [c.canonical() for c in cfgs]
     if not cfgs:
         raise ValueError("emulate_batch needs at least one candidate")
+    for c in cfgs:
+        if c.layers is not None:
+            raise ValueError(
+                "emulate_batch candidates must be per-candidate-uniform "
+                f"stacks; {c.name!r} has heterogeneous per-layer specs "
+                "(cfg.layers), which cannot share one vmapped scan yet"
+            )
     base = cfgs[0]
     skey = _shared_statics_key(base)
     for c in cfgs[1:]:
         if _shared_statics_key(c) != skey:
             raise ValueError(
                 "emulate_batch candidates must share all non-geometry "
-                "statics (n, depth, channels, detector, engine flags); "
+                "statics (n, channels, detector, engine flags); "
                 f"{c.name!r} differs from {base.name!r}"
             )
     K = len(cfgs)
     n = base.n
     gamma = 1.0 if base.gamma is None else float(base.gamma)
-    template = pp.plan_from_config(base, gamma)
+    depths = [c.depth for c in cfgs]
+    mixed_depth = len(set(depths)) > 1
+    # the template plan supplies the shared scan program; its depth is the
+    # padded depth every candidate rides (shallower ones mask their tail)
+    template = pp.plan_from_config(cfgs[int(np.argmax(depths))], gamma)
     has_skip = base.segmentation and base.skip_from is not None
+    if has_skip and base.skip_from >= min(depths):
+        raise ValueError(
+            f"skip_from={base.skip_from} must precede the shallowest "
+            f"candidate (min depth {min(depths)})"
+        )
     tf_a, tf_b, sources, skip_pair = _batched_inputs(
         cfgs, base, gamma, template, has_skip
     )
     if isinstance(params, (list, tuple)):
         if len(params) != K:
             raise ValueError(f"got {len(params)} params for {K} candidates")
-        phis = jnp.stack([_stack_phases(p, base.depth) for p in params])
+        phis = jnp.stack([
+            _stack_phases(p, c.depth, pad_to=template.depth)
+            for p, c in zip(params, cfgs)
+        ])
     else:
+        if mixed_depth:
+            raise ValueError(
+                "mixed-depth candidate sets need per-candidate params "
+                "(one pytree per depth); got a single shared pytree"
+            )
         one = _stack_phases(params, base.depth)
         phis = jnp.broadcast_to(one[None], (K,) + one.shape)
     x = jnp.asarray(x)
@@ -512,11 +610,17 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
         inputs["rngs"] = jax.random.split(rng, K)
     if has_skip:
         inputs["skip_a"], inputs["skip_b"] = skip_pair
+    if mixed_depth:
+        # (K, L_max) layer-validity mask: padded tail layers become
+        # identity hops inside the shared scan
+        inputs["mask"] = jnp.asarray(
+            np.arange(template.depth)[None, :] < np.asarray(depths)[:, None]
+        )
 
     def fn(inp):
         u0 = data_to_cplex(inp["x"], n)  # shared encoded input batch
 
-        def candidate(a, b, src, p, r=None, sa=None, sb=None):
+        def candidate(a, b, src, p, r=None, sa=None, sb=None, m=None):
             u = u0 * src
             tfs = (a, b)
             if family == "seg":
@@ -524,16 +628,18 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
                           if r is not None else None)
                 if has_skip:
                     u = template.forward(p, u, rngs_l,
-                                         stop=base.skip_from + 1, tfs=tfs)
+                                         stop=base.skip_from + 1, tfs=tfs,
+                                         mask=m)
                     skip_u = u
                     u = template.forward(p, u, rngs_l,
-                                         start=base.skip_from + 1, tfs=tfs)
+                                         start=base.skip_from + 1, tfs=tfs,
+                                         mask=m)
                     u = template.propagate_final(u, tfs=tfs)
                     u = (u + template._hop(skip_u, (sa, sb))) / jnp.sqrt(
                         2.0
                     ).astype(jnp.complex64)
                 else:
-                    u = template.forward(p, u, rngs_l, tfs=tfs)
+                    u = template.forward(p, u, rngs_l, tfs=tfs, mask=m)
                     u = template.propagate_final(u, tfs=tfs)
                 inten = df.intensity(u)
                 if train and base.layer_norm:
@@ -541,7 +647,7 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
                     var = jnp.var(inten, axis=(-2, -1), keepdims=True)
                     inten = (inten - mean) * jax.lax.rsqrt(var + 1e-6)
                 return inten
-            u = template.apply(p, u, r, tfs=tfs)
+            u = template.apply(p, u, r, tfs=tfs, mask=m)
             if family == "multi":
                 masks = jnp.asarray(det.masks)
                 if base.use_pallas:
@@ -556,10 +662,12 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
 
         def one(c):
             return candidate(c["tf_a"], c["tf_b"], c["src"], c["phis"],
-                             c.get("rngs"), c.get("skip_a"), c.get("skip_b"))
+                             c.get("rngs"), c.get("skip_a"), c.get("skip_b"),
+                             c.get("mask"))
 
         return jax.vmap(one)(per_cand)
 
-    static_key = ("emulate_batch", family, skey, use_rng, bool(train))
+    static_key = ("emulate_batch", family, skey, use_rng, bool(train),
+                  mixed_depth)
     ex = pp.cached_executable(static_key, fn, inputs)
     return ex(inputs)

@@ -44,9 +44,17 @@ separate unbatched stacks.  This module replaces that loop with a
     (DSE verification sweeps, sensitivity analysis, codesign loops) stops
     paying trace+compile per candidate.
 
+6.  **Segmented plans for heterogeneous stacks** — configs with per-layer
+    ``LayerSpec`` overrides (mixed plane sizes, pixel sizes, approximation
+    methods, codesign devices) compile to a ``SegmentedPlan``: maximal
+    runs of fusable layers each become one scan segment, stitched by
+    eager hops with field resampling at grid boundaries.  Uniform configs
+    keep the single-segment ``PropagationPlan`` (identical HLO and cache
+    keys as before).
+
 The eager path remains available via ``DONNConfig(engine="eager")`` and
 must agree with the plan path to rtol <= 1e-5
-(tests/test_propagation_plan.py).
+(tests/test_propagation_plan.py, tests/test_hetero.py).
 """
 from __future__ import annotations
 
@@ -58,14 +66,15 @@ import numpy as np
 
 from repro.core import codesign as cd
 from repro.core import diffraction as df
+from repro.core.cache import lru_get, lru_put
 
 # --------------------------------------------------------------------------
 # Process-wide caches (TF planes, plans, executables)
 # --------------------------------------------------------------------------
-# All three are bounded LRU maps built on dict insertion order: lookups
-# reinsert the hit entry at the back, eviction pops the front — a DSE sweep
-# alternating more geometries than the bound can hold no longer evicts its
-# own hot entries (the old FIFO did).
+# All three are bounded LRU maps (repro.core.cache): lookups reinsert the
+# hit entry at the back, eviction pops the front — a DSE sweep alternating
+# more geometries than the bound can hold no longer evicts its own hot
+# entries (the old FIFO did).
 _TF_CACHE: dict = {}
 _TF_CACHE_MAX = 512
 _TF_STATS = {"hits": 0, "misses": 0}
@@ -79,21 +88,10 @@ _EXEC_CACHE_MAX = 64
 _EXEC_STATS = {"hits": 0, "misses": 0}
 
 
-def _cache_get(cache: dict, key, stats: dict):
-    """LRU lookup: refresh recency on hit (dicts iterate in insertion order)."""
-    entry = cache.pop(key, None)
-    if entry is None:
-        stats["misses"] += 1
-        return None
-    stats["hits"] += 1
-    cache[key] = entry  # reinsert at the back: most recently used
-    return entry
-
-
-def _cache_put(cache: dict, key, value, max_size: int) -> None:
-    while len(cache) >= max_size:
-        cache.pop(next(iter(cache)))  # front = least recently used
-    cache[key] = value
+# shared implementation (kept under the historical local names used across
+# this module and models.py)
+_cache_get = lru_get
+_cache_put = lru_put
 
 
 def tf_cache_key(grid: df.Grid, z: float, wavelength: float, method: str,
@@ -248,14 +246,19 @@ class PropagationPlan:
         use_pallas: bool = False,
         unroll: Optional[int] = None,
         tf_dtype: str = "float32",
+        final_hop: bool = True,
     ):
+        """``final_hop=False`` builds an *inner segment* of a heterogeneous
+        stack: every gap is a modulated layer's gap and ``propagate_final``
+        is unavailable (the next segment owns the following hop)."""
         if method not in df.METHODS:
             raise ValueError(f"unknown method {method!r}")
         if tf_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"unknown tf_dtype {tf_dtype!r}")
         self.grid = grid
         self.gaps = tuple(float(g) for g in gaps)
-        self.depth = len(self.gaps) - 1
+        self.final_hop = final_hop
+        self.depth = len(self.gaps) - 1 if final_hop else len(self.gaps)
         self.wavelength = wavelength
         self.method = method
         self.band_limit = band_limit
@@ -362,26 +365,50 @@ class PropagationPlan:
                   else default_scan_unroll(self.depth))
         return max(1, min(int(unroll), max(length, 1)))
 
+    # --- phase-stack assembly (uniform: one stack; see SegmentedPlan) ---
+    @property
+    def segment_slices(self) -> tuple:
+        """Global layer-index ranges of each fused scan segment."""
+        return ((0, self.depth),)
+
+    def stack_phases(self, phases) -> jax.Array:
+        """Per-layer phase arrays -> the (L, ...) stack ``forward`` scans."""
+        return jnp.stack(list(phases))
+
     def forward(self, phis: jax.Array, u: jax.Array, rngs=None,
                 start: int = 0, stop: Optional[int] = None,
-                tfs=None) -> jax.Array:
+                tfs=None, mask=None) -> jax.Array:
         """Scan layers [start, stop) over the field u.
 
         phis: full (L, ...) phase stack (codesign is applied to the whole
         stack so per-layer rng alignment is independent of the slice);
         rngs: optional (L, key) stack from ``jax.random.split``;
         tfs: optional external split-plane pair, each (depth+1, ...) —
-        defaults to the plan's baked constants.
+        defaults to the plan's baked constants;
+        mask: optional (L,) bool vector — masked-out layers are identity
+        hops (the carry passes through untouched), which is how depth-
+        padded candidate stacks emulate shallower architectures through
+        one shared scan (``repro.core.models.emulate_batch``).
         """
         stop = self.depth if stop is None else stop
         phi_eff = self._codesign_stack(phis, rngs)
         a, b = self._tf_pair() if tfs is None else tfs
-        xs = (a[start:stop], b[start:stop], phi_eff[start:stop])
+        if mask is None:
+            xs = (a[start:stop], b[start:stop], phi_eff[start:stop])
 
-        def body(carry, layer):
-            a_l, b_l, phi = layer
-            carry = self._modulate(self._hop(carry, (a_l, b_l)), phi)
-            return carry, None
+            def body(carry, layer):
+                a_l, b_l, phi = layer
+                carry = self._modulate(self._hop(carry, (a_l, b_l)), phi)
+                return carry, None
+        else:
+            xs = (a[start:stop], b[start:stop], phi_eff[start:stop],
+                  mask[start:stop])
+
+            def body(carry, layer):
+                a_l, b_l, phi, m = layer
+                new = self._modulate(self._hop(carry, (a_l, b_l)), phi)
+                carry = jnp.where(m, new, carry)
+                return carry, None
 
         u, _ = jax.lax.scan(body, u, xs,
                             unroll=self._scan_unroll(stop - start))
@@ -389,22 +416,29 @@ class PropagationPlan:
 
     def propagate_final(self, u: jax.Array, tfs=None) -> jax.Array:
         """The last free-space hop (layer plane -> detector, no modulation)."""
+        if not self.final_hop:
+            raise ValueError(
+                "this plan is an inner segment (final_hop=False); the next "
+                "segment owns the following hop"
+            )
         a, b = self._tf_pair() if tfs is None else tfs
         return self._hop(u, (a[self.depth], b[self.depth]))
 
     def apply(self, phis: jax.Array, u: jax.Array, rng=None,
-              tfs=None) -> jax.Array:
+              tfs=None, mask=None) -> jax.Array:
         """Full stack: scan all layers then the final hop.
 
         rng is a single key (split into per-layer keys here, mirroring the
         eager model) or None.
         """
         rngs = jax.random.split(rng, self.depth) if rng is not None else None
-        return self.propagate_final(self.forward(phis, u, rngs, tfs=tfs),
-                                    tfs=tfs)
+        return self.propagate_final(
+            self.forward(phis, u, rngs, tfs=tfs, mask=mask), tfs=tfs
+        )
 
     def apply_batch(self, phis: jax.Array, u: jax.Array, rng=None,
-                    tfs=None, per_candidate_inputs: bool = False) -> jax.Array:
+                    tfs=None, per_candidate_inputs: bool = False,
+                    mask=None) -> jax.Array:
         """Vmapped multi-candidate forward: K phase configs, one program.
 
         phis: (K, L, N, N) or (K, L, C, N, N) stack of K candidate phase
@@ -413,40 +447,188 @@ class PropagationPlan:
         ``per_candidate_inputs``; tfs: optional per-candidate plane pair
         with leading K axis (each (K, depth+1, ...)) — the DSE path where
         candidate *geometries* differ but ride one compiled forward;
-        rng: one key, split across candidates.  Returns the stacked
-        (K, ...) detector-plane fields.
+        rng: one key, split across candidates; mask: optional (K, L) bool
+        layer-validity matrix for depth-padded (ragged-depth) candidate
+        sets.  Returns the stacked (K, ...) detector-plane fields.
         """
-        u_ax = 0 if per_candidate_inputs else None
-        if rng is None:
-            if tfs is None:
-                return jax.vmap(
-                    lambda p, uu: self.apply(p, uu), in_axes=(0, u_ax)
-                )(phis, u)
-            return jax.vmap(
-                lambda p, uu, t: self.apply(p, uu, tfs=t),
-                in_axes=(0, u_ax, 0),
-            )(phis, u, tfs)
-        rngs = jax.random.split(rng, phis.shape[0])
-        if tfs is None:
-            return jax.vmap(
-                lambda p, uu, r: self.apply(p, uu, r), in_axes=(0, u_ax, 0)
-            )(phis, u, rngs)
-        return jax.vmap(
-            lambda p, uu, r, t: self.apply(p, uu, r, tfs=t),
-            in_axes=(0, u_ax, 0, 0),
-        )(phis, u, rngs, tfs)
+        inp = {"phis": phis, "u": u}
+        axes = {"phis": 0, "u": 0 if per_candidate_inputs else None}
+        if rng is not None:
+            inp["rng"] = jax.random.split(rng, phis.shape[0])
+            axes["rng"] = 0
+        if tfs is not None:
+            inp["tfs"] = tuple(tfs)
+            axes["tfs"] = (0, 0)
+        if mask is not None:
+            inp["mask"] = mask
+            axes["mask"] = 0
+
+        def one(d):
+            return self.apply(d["phis"], d["u"], d.get("rng"),
+                              tfs=d.get("tfs"), mask=d.get("mask"))
+
+        return jax.vmap(one, in_axes=(axes,))(inp)
+
+
+# --------------------------------------------------------------------------
+# Segmented plan (heterogeneous per-layer architectures)
+# --------------------------------------------------------------------------
+def segment_layers(resolved_layers) -> tuple:
+    """Group resolved ``LayerSpec``s into maximal fusable runs.
+
+    Consecutive layers sharing (size, pixel_size, approximation, codesign
+    device) compile into one fused ``lax.scan`` segment; a boundary is cut
+    wherever any of those change.  Returns ``((start, stop), ...)`` global
+    layer-index slices.
+    """
+    def seg_key(s):
+        return (s.size, s.pixel_size, s.approximation, s.codesign,
+                s.device_levels, s.response_gamma)
+
+    slices, start = [], 0
+    for i in range(1, len(resolved_layers)):
+        if seg_key(resolved_layers[i]) != seg_key(resolved_layers[i - 1]):
+            slices.append((start, i))
+            start = i
+    slices.append((start, len(resolved_layers)))
+    return tuple(slices)
+
+
+class SegmentedPlan:
+    """Scan-based forward for a *heterogeneous* diffractive stack.
+
+    Maximal runs of layers sharing (plane size, pixel size, approximation,
+    codesign device) each compile to one fused ``lax.scan`` segment —
+    exactly the uniform ``PropagationPlan`` machinery — with eager stitch
+    hops between segments: when adjacent segments live on different grids
+    the field is resampled (bilinear over physical coordinates, exact
+    crop/pad for equal pixel sizes) at the boundary.  A uniform model is a
+    single segment and never takes this path (``plan_from_config`` keeps
+    returning the plain ``PropagationPlan`` for it), so the homogeneous
+    HLO/perf is untouched.
+
+    Phase stacks are *pytrees*: one ``(L_k, ...)`` stack per segment
+    (``stack_phases`` assembles them from per-layer arrays; shapes are
+    ragged across segments when plane sizes differ).
+    """
+
+    def __init__(self, cfg, gamma: float = 1.0):
+        cfg = cfg.canonical()
+        if cfg.layers is None:
+            raise ValueError("SegmentedPlan needs a heterogeneous config; "
+                             "use PropagationPlan for uniform stacks")
+        specs = cfg.resolved_layers()
+        self.cfg = cfg
+        self.gamma = float(gamma)
+        self.depth = len(specs)
+        self.slices = segment_layers(specs)
+        self.det_grid = df.Grid(cfg.n, cfg.pixel_size)
+        self.segments = []
+        for k, (lo, hi) in enumerate(self.slices):
+            s0 = specs[lo]
+            last = k == len(self.slices) - 1
+            gaps = [specs[i].distance for i in range(lo, hi)]
+            if last:
+                gaps.append(cfg.gap_distances()[-1])
+            self.segments.append(PropagationPlan(
+                df.Grid(s0.size, s0.pixel_size),
+                gaps,
+                cfg.wavelength,
+                method=s0.approximation,
+                band_limit=cfg.band_limit,
+                pad=cfg.pad,
+                gamma=gamma,
+                device=cd.device_for_layer(s0.codesign, s0.device_levels,
+                                           s0.response_gamma),
+                codesign_mode=s0.codesign,
+                use_pallas=cfg.use_pallas,
+                unroll=cfg.scan_unroll,
+                tf_dtype=cfg.tf_dtype,
+                final_hop=last,
+            ))
+        self.input_grid = self.segments[0].grid
+        self.layer_grids = tuple(df.Grid(s.size, s.pixel_size) for s in specs)
+
+    # --- phase-stack assembly ---
+    @property
+    def segment_slices(self) -> tuple:
+        return self.slices
+
+    def stack_phases(self, phases) -> tuple:
+        """Per-layer phase arrays -> per-segment stacks (ragged pytree)."""
+        phases = list(phases)
+        if len(phases) != self.depth:
+            raise ValueError(f"expected {self.depth} phase maps, "
+                             f"got {len(phases)}")
+        return tuple(
+            jnp.stack(phases[lo:hi]) for lo, hi in self.slices
+        )
+
+    # --- forward ---
+    def forward(self, phis, u: jax.Array, rngs=None, start: int = 0,
+                stop: Optional[int] = None, tfs=None) -> jax.Array:
+        """Run global layers [start, stop); ``phis`` is the per-segment
+        pytree from ``stack_phases``.  The incoming field must live on the
+        grid of layer ``start - 1`` (the input grid when start == 0); the
+        returned field lives on the grid of layer ``stop - 1``."""
+        if tfs is not None:
+            raise NotImplementedError(
+                "external transfer planes are a uniform-plan feature "
+                "(batched DSE); segmented plans bake their constants"
+            )
+        stop = self.depth if stop is None else stop
+        cur_grid = (self.layer_grids[start - 1] if start > 0
+                    else self.input_grid)
+        for k, (lo, hi) in enumerate(self.slices):
+            a, b = max(lo, start), min(hi, stop)
+            if a >= b:
+                continue
+            seg = self.segments[k]
+            if seg.grid != cur_grid:
+                u = df.resample_field(u, cur_grid, seg.grid)
+            seg_rngs = rngs[lo:hi] if rngs is not None else None
+            u = seg.forward(phis[k], u, seg_rngs, start=a - lo, stop=b - lo)
+            cur_grid = seg.grid
+        return u
+
+    def propagate_final(self, u: jax.Array, tfs=None) -> jax.Array:
+        """Last free-space hop (on the last layer's grid), then the stitch
+        onto the detector grid if it differs."""
+        if tfs is not None:
+            raise NotImplementedError("segmented plans bake their constants")
+        u = self.segments[-1].propagate_final(u)
+        return df.resample_field(u, self.segments[-1].grid, self.det_grid)
+
+    def apply(self, phis, u: jax.Array, rng=None, tfs=None) -> jax.Array:
+        rngs = jax.random.split(rng, self.depth) if rng is not None else None
+        return self.propagate_final(self.forward(phis, u, rngs, tfs=tfs))
 
 
 def device_spec_from_config(cfg) -> Optional[cd.DeviceSpec]:
     """The (frozen, hashable) codesign device a config describes, or None."""
-    if cfg.codesign == "none":
-        return None
-    return cd.DeviceSpec(levels=cfg.device_levels,
-                         response_gamma=cfg.response_gamma)
+    return cd.device_for_layer(cfg.codesign, cfg.device_levels,
+                               cfg.response_gamma)
 
 
 def plan_cache_key(cfg, gamma: float) -> tuple:
-    """Geometry tuple identifying one ``PropagationPlan`` build."""
+    """Geometry tuple identifying one plan build.
+
+    Configs are canonicalized first, so a uniform architecture spelled via
+    ``layers`` hits the *identical* cache entry as the scalar spelling;
+    genuinely heterogeneous configs key on the fully-resolved per-layer
+    tuple instead.
+    """
+    cfg = cfg.canonical()
+    if cfg.layers is not None:
+        per_layer = tuple(
+            (l.size, float(l.pixel_size), float(l.distance), l.approximation,
+             l.codesign, l.device_levels, float(l.response_gamma))
+            for l in cfg.layers
+        )
+        return ("seg", per_layer, cfg.n, float(cfg.pixel_size),
+                float(cfg.distance), float(cfg.wavelength),
+                bool(cfg.band_limit), bool(cfg.pad), float(gamma),
+                bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype)
     dev = device_spec_from_config(cfg)
     return (cfg.n, float(cfg.pixel_size), cfg.gap_distances(),
             float(cfg.wavelength), cfg.approximation, bool(cfg.band_limit),
@@ -454,31 +636,38 @@ def plan_cache_key(cfg, gamma: float) -> tuple:
             bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype)
 
 
-def plan_from_config(cfg, gamma: float) -> PropagationPlan:
+def plan_from_config(cfg, gamma: float):
     """Build (or fetch) the plan for a config — memoized per geometry tuple.
 
-    Plans are immutable once built (stacked numpy constants + lazily
-    uploaded device arrays), so every model/step/benchmark sharing a
-    geometry shares one plan instead of rebuilding and re-uploading it.
+    Uniform configs get the fused single-scan ``PropagationPlan``;
+    heterogeneous configs (``cfg.layers`` surviving canonicalization) get a
+    ``SegmentedPlan``.  Plans are immutable once built (stacked numpy
+    constants + lazily uploaded device arrays), so every model/step/
+    benchmark sharing a geometry shares one plan instead of rebuilding and
+    re-uploading it.
     """
     key = plan_cache_key(cfg, gamma)
     plan = _cache_get(_PLAN_CACHE, key, _PLAN_STATS)
     if plan is not None:
         return plan
-    dev = device_spec_from_config(cfg)
-    plan = PropagationPlan(
-        df.Grid(cfg.n, cfg.pixel_size),
-        cfg.gap_distances(),
-        cfg.wavelength,
-        method=cfg.approximation,
-        band_limit=cfg.band_limit,
-        pad=cfg.pad,
-        gamma=gamma,
-        device=dev,
-        codesign_mode=cfg.codesign,
-        use_pallas=cfg.use_pallas,
-        unroll=cfg.scan_unroll,
-        tf_dtype=cfg.tf_dtype,
-    )
+    cfg = cfg.canonical()
+    if cfg.layers is not None:
+        plan = SegmentedPlan(cfg, gamma)
+    else:
+        dev = device_spec_from_config(cfg)
+        plan = PropagationPlan(
+            df.Grid(cfg.n, cfg.pixel_size),
+            cfg.gap_distances(),
+            cfg.wavelength,
+            method=cfg.approximation,
+            band_limit=cfg.band_limit,
+            pad=cfg.pad,
+            gamma=gamma,
+            device=dev,
+            codesign_mode=cfg.codesign,
+            use_pallas=cfg.use_pallas,
+            unroll=cfg.scan_unroll,
+            tf_dtype=cfg.tf_dtype,
+        )
     _cache_put(_PLAN_CACHE, key, plan, _PLAN_CACHE_MAX)
     return plan

@@ -6,6 +6,13 @@ batch shards over every mesh axis, phase parameters replicate (they are
 tiny: depth x n^2), and gradients all-reduce.  Spatial (field) model-
 parallelism via a pencil-decomposed FFT is implemented separately in
 `repro.runtime.pencil_fft` and evaluated in the §Perf hillclimb.
+
+Heterogeneous per-layer architectures (``DONNConfig.layers``) ride the
+same steps unchanged: the phase params form a *ragged* pytree (one
+(n_i, n_i) leaf per layer, shapes varying across segments), and every
+state/sharding transform here is a ``jax.tree`` map over ParamSpec
+leaves, so per-layer plane sizes need no special casing
+(tests/test_hetero.py::TestHeterogeneousForward::test_train_step).
 """
 from __future__ import annotations
 

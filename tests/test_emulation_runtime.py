@@ -110,10 +110,19 @@ class TestEmulateBatch:
 
     def test_statics_mismatch_raises(self):
         cfgs = _cls_cfgs()
-        bad = dataclasses.replace(cfgs[1], depth=4)
+        bad = dataclasses.replace(cfgs[1], num_classes=6)
         params = build_model(cfgs[0]).init(jax.random.PRNGKey(0))
         with pytest.raises(ValueError, match="statics"):
             emulate_batch([cfgs[0], bad], params, _digits())
+
+    def test_mixed_depth_needs_per_candidate_params(self):
+        # depth is a *geometry* axis now (depth-padded + masked stacks),
+        # but a single shared params pytree cannot cover two depths
+        cfgs = _cls_cfgs()
+        deeper = dataclasses.replace(cfgs[1], depth=4)
+        params = build_model(cfgs[0]).init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="per-candidate params"):
+            emulate_batch([cfgs[0], deeper], params, _digits())
 
     def test_empty_and_param_count_checks(self):
         cfgs = _cls_cfgs()
