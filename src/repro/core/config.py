@@ -118,11 +118,27 @@ class DONNConfig:
     # TF-plane storage dtype: "float32" (reference) | "bfloat16" (half the
     # constant memory; accumulation stays f32, agreement tolerance loosens)
     tf_dtype: str = "float32"
+    # Rematerialization policy for the layer scan (training memory knob):
+    #   "none"    — store every layer's activations for the backward pass
+    #               (fastest, highest memory; the default);
+    #   "layer"   — jax.checkpoint the scan body, so the backward pass
+    #               recomputes each layer's FFT chain from its carry
+    #               (activation memory drops from O(depth) fields to O(1)
+    #               per scan segment — the deep/large-plane training knob);
+    #   "segment" — jax.checkpoint each fused scan segment as a whole
+    #               (per-segment boundaries only; for uniform stacks this
+    #               checkpoints the entire layer stack).
+    remat: str = "none"
 
     def __post_init__(self):
         if self.engine not in ("scan", "eager"):
             raise ValueError(
                 f"engine must be 'scan' or 'eager', got {self.engine!r}"
+            )
+        if self.remat not in ("none", "layer", "segment"):
+            raise ValueError(
+                f"remat must be 'none', 'layer' or 'segment', "
+                f"got {self.remat!r}"
             )
         if self.tf_dtype not in ("float32", "bfloat16"):
             raise ValueError(

@@ -99,7 +99,7 @@ def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
                 segmentation: bool = False, skip_from: Optional[int] = None,
                 channels: int = 1, input_size: int = 28,
                 engine: str = "scan", scan_unroll: Optional[int] = None,
-                tf_dtype: str = "float32",
+                tf_dtype: str = "float32", remat: str = "none",
                 layer_norm: Optional[bool] = None,
                 n: Optional[int] = None,
                 pixel_size: Optional[float] = None):
@@ -148,6 +148,7 @@ def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
         engine=engine,
         scan_unroll=scan_unroll,
         tf_dtype=tf_dtype,
+        remat=remat,
     )
     precision = first.get("precision")
     if not hetero:
@@ -188,8 +189,8 @@ def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
 
 _SEQUENTIAL_OPTS = (
     "name", "gamma", "use_pallas", "segmentation", "skip_from", "channels",
-    "input_size", "engine", "scan_unroll", "tf_dtype", "layer_norm",
-    "n", "pixel_size",
+    "input_size", "engine", "scan_unroll", "tf_dtype", "remat",
+    "layer_norm", "n", "pixel_size",
 )
 
 
@@ -255,6 +256,7 @@ def to_spec(cfg: DONNConfig, laser_: Optional[Laser] = None) -> dict:
         "engine": cfg.engine,
         "scan_unroll": cfg.scan_unroll,
         "tf_dtype": cfg.tf_dtype,
+        "remat": cfg.remat,
         "layer_norm": cfg.layer_norm,
     }
     return spec

@@ -380,6 +380,25 @@ def clear_emulation_caches() -> None:
     pp.clear_plan_cache()
 
 
+def model_cache_key(model) -> Optional[tuple]:
+    """Executable-cache identity of a model, or None when not keyable.
+
+    A model may share cached (training) executables iff its numerics are a
+    pure function of its config: it exposes ``cfg`` and was built with the
+    default laser (``Laser`` is a frozen dataclass, so default-equivalent
+    explicit lasers compare equal).  Custom-profile models return None and
+    fall back to per-closure jit.  Used by the train-step factories in
+    ``repro.core.train_utils``.
+    """
+    cfg = getattr(model, "cfg", None)
+    if cfg is None:
+        return None
+    inner = getattr(model, "channel_model", model)  # MultiChannelDONN
+    if getattr(inner, "laser", None) != Laser(wavelength=cfg.wavelength):
+        return None
+    return config_static_key(cfg)
+
+
 def cached_model(cfg: DONNConfig, laser: Optional[Laser] = None):
     """Memoized ``build_model`` (default laser only).
 

@@ -88,8 +88,7 @@ _EXEC_CACHE_MAX = 64
 _EXEC_STATS = {"hits": 0, "misses": 0}
 
 
-# shared implementation (kept under the historical local names used across
-# this module and models.py)
+# shared bounded-LRU implementation (repro.core.cache)
 _cache_get = lru_get
 _cache_put = lru_put
 
@@ -180,18 +179,25 @@ def _aval_key(args) -> tuple:
     )
 
 
-def cached_executable(static_key: tuple, fn: Callable, *args):
+def cached_executable(static_key: tuple, fn: Callable, *args,
+                      donate_argnums: tuple = ()):
     """AOT-compiled ``fn`` for the shapes/dtypes of ``args``.
 
-    Keyed by ``(static_key, input avals)`` — the compile-once layer above
-    the TF/plan caches.  Repeated emulations with identical statics and
-    input shapes reuse one XLA executable instead of re-tracing a fresh
-    closure (what every ``build_model``+``jit(apply)`` cycle used to pay).
+    Keyed by ``(static_key, donation, input avals)`` — the compile-once
+    layer above the TF/plan caches.  Repeated emulations with identical
+    statics and input shapes reuse one XLA executable instead of re-tracing
+    a fresh closure (what every ``build_model``+``jit(apply)`` cycle used
+    to pay).  ``donate_argnums`` compiles the executable with those
+    positional inputs donated (the chunked training drivers donate params
+    and optimizer state so step k+1 reuses step k's buffers in place).
     """
-    key = (static_key, _aval_key(args))
+    donate_argnums = tuple(donate_argnums)
+    key = (static_key, donate_argnums, _aval_key(args))
     compiled = _cache_get(_EXEC_CACHE, key, _EXEC_STATS)
     if compiled is None:
-        compiled = jax.jit(fn).lower(*args).compile()
+        compiled = jax.jit(
+            fn, donate_argnums=donate_argnums
+        ).lower(*args).compile()
         _cache_put(_EXEC_CACHE, key, compiled, _EXEC_CACHE_MAX)
     return compiled
 
@@ -247,14 +253,24 @@ class PropagationPlan:
         unroll: Optional[int] = None,
         tf_dtype: str = "float32",
         final_hop: bool = True,
+        remat: str = "none",
     ):
         """``final_hop=False`` builds an *inner segment* of a heterogeneous
         stack: every gap is a modulated layer's gap and ``propagate_final``
-        is unavailable (the next segment owns the following hop)."""
+        is unavailable (the next segment owns the following hop).
+
+        ``remat`` threads a ``jax.checkpoint`` policy into the scan:
+        ``"layer"`` checkpoints the scan body (the backward pass recomputes
+        each layer's FFT chain from its carry instead of storing it),
+        ``"segment"`` checkpoints the whole scan region.  Both trade
+        recompute for activation memory — the knob that keeps deep or
+        large-plane *training* from OOMing."""
         if method not in df.METHODS:
             raise ValueError(f"unknown method {method!r}")
         if tf_dtype not in ("float32", "bfloat16"):
             raise ValueError(f"unknown tf_dtype {tf_dtype!r}")
+        if remat not in ("none", "layer", "segment"):
+            raise ValueError(f"unknown remat {remat!r}")
         self.grid = grid
         self.gaps = tuple(float(g) for g in gaps)
         self.final_hop = final_hop
@@ -269,6 +285,7 @@ class PropagationPlan:
         self.use_pallas = use_pallas
         self.unroll = unroll
         self.tf_dtype = tf_dtype
+        self.remat = remat
         # split-plane pair consumed by the scan body: polar for the fused
         # Pallas kernel, cartesian for the jnp path
         self._plane_keys = ("theta", "amp") if use_pallas else ("hr", "hi")
@@ -325,8 +342,23 @@ class PropagationPlan:
         ur, ui = kops.phase_tf_apply(u.real, u.imag, phi, amp)
         return jax.lax.complex(ur, ui)
 
-    def _hop(self, u: jax.Array, pair) -> jax.Array:
-        """One free-space gap with a prepared TF plane pair."""
+    def _hop(self, u: jax.Array, pair, spectral=None) -> jax.Array:
+        """One free-space gap with a prepared TF plane pair.
+
+        ``spectral`` optionally overrides the (fft2, ifft2) pair — the hook
+        distributed spectral hops use: ``repro.runtime.pencil_fft.
+        local_spectral_pair`` runs the pencil-decomposed local FFT *inside*
+        the scan body when fields (and TF planes) are row-sharded under an
+        enclosing ``shard_map``.
+        """
+        if spectral is not None:
+            if self.method == df.FRAUNHOFER or self.pad:
+                raise NotImplementedError(
+                    "spectral-hop overrides support unpadded angular-"
+                    "spectrum methods only (no fraunhofer, no pad)"
+                )
+            fft2, ifft2 = spectral
+            return ifft2(self._spectral_mul(fft2(u), pair))
         if self.method == df.FRAUNHOFER:
             spec = jnp.fft.fftshift(jnp.fft.fft2(u), axes=(-2, -1))
             return self._spectral_mul(spec, pair)
@@ -377,7 +409,7 @@ class PropagationPlan:
 
     def forward(self, phis: jax.Array, u: jax.Array, rngs=None,
                 start: int = 0, stop: Optional[int] = None,
-                tfs=None, mask=None) -> jax.Array:
+                tfs=None, mask=None, pre=None, spectral=None) -> jax.Array:
         """Scan layers [start, stop) over the field u.
 
         phis: full (L, ...) phase stack (codesign is applied to the whole
@@ -388,9 +420,21 @@ class PropagationPlan:
         mask: optional (L,) bool vector — masked-out layers are identity
         hops (the carry passes through untouched), which is how depth-
         padded candidate stacks emulate shallower architectures through
-        one shared scan (``repro.core.models.emulate_batch``).
+        one shared scan (``repro.core.models.emulate_batch``);
+        pre: optional callable applied to the initial carry *inside* this
+        forward (``SegmentedPlan`` folds boundary stitch resamples into the
+        adjacent segment this way, so the stitch fuses with the segment's
+        first hop instead of running as a detached einsum);
+        spectral: optional (fft2, ifft2) override for every hop in the
+        scan body — the distributed pencil-FFT path
+        (``repro.runtime.pencil_fft.local_spectral_pair``).
+
+        The plan's ``remat`` policy wraps the body (``"layer"``) or the
+        whole scan (``"segment"``) in ``jax.checkpoint``.
         """
         stop = self.depth if stop is None else stop
+        if pre is not None:
+            u = pre(u)
         phi_eff = self._codesign_stack(phis, rngs)
         a, b = self._tf_pair() if tfs is None else tfs
         if mask is None:
@@ -398,7 +442,9 @@ class PropagationPlan:
 
             def body(carry, layer):
                 a_l, b_l, phi = layer
-                carry = self._modulate(self._hop(carry, (a_l, b_l)), phi)
+                carry = self._modulate(
+                    self._hop(carry, (a_l, b_l), spectral), phi
+                )
                 return carry, None
         else:
             xs = (a[start:stop], b[start:stop], phi_eff[start:stop],
@@ -406,15 +452,26 @@ class PropagationPlan:
 
             def body(carry, layer):
                 a_l, b_l, phi, m = layer
-                new = self._modulate(self._hop(carry, (a_l, b_l)), phi)
+                new = self._modulate(
+                    self._hop(carry, (a_l, b_l), spectral), phi
+                )
                 carry = jnp.where(m, new, carry)
                 return carry, None
 
-        u, _ = jax.lax.scan(body, u, xs,
-                            unroll=self._scan_unroll(stop - start))
-        return u
+        if self.remat == "layer":
+            body = jax.checkpoint(body)
 
-    def propagate_final(self, u: jax.Array, tfs=None) -> jax.Array:
+        def run(u0, xs_):
+            out, _ = jax.lax.scan(body, u0, xs_,
+                                  unroll=self._scan_unroll(stop - start))
+            return out
+
+        if self.remat == "segment":
+            run = jax.checkpoint(run)
+        return run(u, xs)
+
+    def propagate_final(self, u: jax.Array, tfs=None,
+                        spectral=None) -> jax.Array:
         """The last free-space hop (layer plane -> detector, no modulation)."""
         if not self.final_hop:
             raise ValueError(
@@ -422,10 +479,10 @@ class PropagationPlan:
                 "segment owns the following hop"
             )
         a, b = self._tf_pair() if tfs is None else tfs
-        return self._hop(u, (a[self.depth], b[self.depth]))
+        return self._hop(u, (a[self.depth], b[self.depth]), spectral)
 
     def apply(self, phis: jax.Array, u: jax.Array, rng=None,
-              tfs=None, mask=None) -> jax.Array:
+              tfs=None, mask=None, spectral=None) -> jax.Array:
         """Full stack: scan all layers then the final hop.
 
         rng is a single key (split into per-layer keys here, mirroring the
@@ -433,7 +490,9 @@ class PropagationPlan:
         """
         rngs = jax.random.split(rng, self.depth) if rng is not None else None
         return self.propagate_final(
-            self.forward(phis, u, rngs, tfs=tfs, mask=mask), tfs=tfs
+            self.forward(phis, u, rngs, tfs=tfs, mask=mask,
+                         spectral=spectral),
+            tfs=tfs, spectral=spectral,
         )
 
     def apply_batch(self, phis: jax.Array, u: jax.Array, rng=None,
@@ -545,6 +604,7 @@ class SegmentedPlan:
                 unroll=cfg.scan_unroll,
                 tf_dtype=cfg.tf_dtype,
                 final_hop=last,
+                remat=cfg.remat,
             ))
         self.input_grid = self.segments[0].grid
         self.layer_grids = tuple(df.Grid(s.size, s.pixel_size) for s in specs)
@@ -584,10 +644,18 @@ class SegmentedPlan:
             if a >= b:
                 continue
             seg = self.segments[k]
+            stitch = None
             if seg.grid != cur_grid:
-                u = df.resample_field(u, cur_grid, seg.grid)
+                # boundary stitch folded into the adjacent segment: the
+                # resample runs inside ``seg.forward`` (split real/imag
+                # matmuls, exact slicing at equal pitch) so it fuses with
+                # the segment's first hop instead of sitting between scans
+                src = cur_grid
+                stitch = lambda v, s=src, g=seg.grid: df.resample_field(
+                    v, s, g)
             seg_rngs = rngs[lo:hi] if rngs is not None else None
-            u = seg.forward(phis[k], u, seg_rngs, start=a - lo, stop=b - lo)
+            u = seg.forward(phis[k], u, seg_rngs, start=a - lo, stop=b - lo,
+                            pre=stitch)
             cur_grid = seg.grid
         return u
 
@@ -628,12 +696,13 @@ def plan_cache_key(cfg, gamma: float) -> tuple:
         return ("seg", per_layer, cfg.n, float(cfg.pixel_size),
                 float(cfg.distance), float(cfg.wavelength),
                 bool(cfg.band_limit), bool(cfg.pad), float(gamma),
-                bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype)
+                bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype,
+                cfg.remat)
     dev = device_spec_from_config(cfg)
     return (cfg.n, float(cfg.pixel_size), cfg.gap_distances(),
             float(cfg.wavelength), cfg.approximation, bool(cfg.band_limit),
             bool(cfg.pad), float(gamma), dev, cfg.codesign,
-            bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype)
+            bool(cfg.use_pallas), cfg.scan_unroll, cfg.tf_dtype, cfg.remat)
 
 
 def plan_from_config(cfg, gamma: float):
@@ -668,6 +737,7 @@ def plan_from_config(cfg, gamma: float):
             use_pallas=cfg.use_pallas,
             unroll=cfg.scan_unroll,
             tf_dtype=cfg.tf_dtype,
+            remat=cfg.remat,
         )
     _cache_put(_PLAN_CACHE, key, plan, _PLAN_CACHE_MAX)
     return plan

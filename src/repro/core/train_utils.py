@@ -2,8 +2,20 @@
 
 Loss per the paper (§2.1): L = || softmax(I) - onehot(t) ||_2^2 over the
 per-class detector intensities I.  Also: accuracy, detector-noise injection
-(Fig. 7 confidence study), and a jit'd training loop used by the examples and
-benchmarks.
+(Fig. 7 confidence study), and the training drivers used by the examples
+and benchmarks:
+
+- ``make_train_step``: the classic one-batch step (params, opt_state,
+  step, xb, yb, rng) -> (params, opt_state, loss, acc) — routed through
+  the process-wide executable cache when the model/optimizer are
+  cache-keyable, so rebuilding a model around the same config stops
+  re-tracing an identical training program.
+- ``make_train_chunk``: the throughput driver — one jit runs
+  ``steps_per_call`` optimizer steps as a ``lax.scan`` over a stacked
+  batch chunk with (params, opt_state) *donated*, losses/metrics
+  accumulated on device, and exactly one host sync per chunk.
+- ``train_classifier(steps_per_call=...)``: epoch loop on top, fed by the
+  double-buffered device prefetcher (``repro.data.pipeline``).
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim import AdamW
 
@@ -63,8 +76,42 @@ class TrainResult:
     wall_time_s: float
 
 
+def optimizer_cache_key(optimizer) -> Optional[tuple]:
+    """Hashable identity of an optimizer, or None when not cache-keyable.
+
+    Frozen optimizer dataclasses whose fields are all plain primitives (or
+    dtypes) key the executable cache; schedules and other callables fall
+    back to per-closure jit (their identity is not value-comparable).
+    """
+    if not dataclasses.is_dataclass(optimizer):
+        return None
+    vals = []
+    for f in dataclasses.fields(optimizer):
+        v = getattr(optimizer, f.name)
+        if not isinstance(v, (int, float, str, bool, type(None), type)):
+            return None
+        vals.append((f.name, v))
+    return (type(optimizer).__name__, tuple(vals))
+
+
+def _train_static_key(tag: str, model, optimizer, *extras) -> Optional[tuple]:
+    from repro.core.models import model_cache_key
+
+    mkey = model_cache_key(model)
+    okey = optimizer_cache_key(optimizer)
+    if mkey is None or okey is None:
+        return None
+    return (tag, mkey, okey) + tuple(extras)
+
+
 def make_train_step(model, optimizer, num_classes: int, needs_rng: bool = False):
-    """jit'd (params, opt_state, step, batch[, rng]) -> (params, opt, loss, acc)."""
+    """jit'd (params, opt_state, step, batch[, rng]) -> (params, opt, loss, acc).
+
+    Routed through ``repro.core.propagation.cached_executable`` (keyed by
+    the model's config statics + optimizer values + input avals) whenever
+    the model/optimizer are cache-keyable, so examples and benchmarks that
+    rebuild identical models stop re-tracing the same training program.
+    """
 
     def loss_fn(params, xb, yb, rng):
         logits = model.apply(params, xb, rng) if needs_rng else model.apply(
@@ -72,15 +119,87 @@ def make_train_step(model, optimizer, num_classes: int, needs_rng: bool = False)
         )
         return mse_softmax_loss(logits, yb, num_classes), logits
 
-    @jax.jit
-    def step_fn(params, opt_state, step, xb, yb, rng):
+    def step_impl(params, opt_state, step, xb, yb, rng):
         (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, xb, yb, rng
         )
         params, opt_state = optimizer.update(grads, opt_state, params, step)
         return params, opt_state, loss, accuracy(logits, yb)
 
+    skey = _train_static_key("donn_train_step", model, optimizer,
+                             num_classes, needs_rng)
+    if skey is None:
+        return jax.jit(step_impl)
+    from repro.core import propagation as pp
+
+    def step_fn(params, opt_state, step, xb, yb, rng):
+        args = (params, opt_state, jnp.asarray(step), jnp.asarray(xb),
+                jnp.asarray(yb), rng)
+        return pp.cached_executable(skey, step_impl, *args)(*args)
+
     return step_fn
+
+
+def make_train_chunk(model, optimizer, num_classes: int,
+                     needs_rng: bool = False, donate: bool = True):
+    """Donated multi-step scanned training driver (the throughput engine).
+
+    Returns ``chunk_fn(params, opt_state, step0, xs, ys, rng) -> (params,
+    opt_state, rng, losses, accs)`` running one optimizer step per leading
+    ``xs``/``ys`` row as a single ``lax.scan`` inside one jit:
+
+    - (params, opt_state) are **donated** — step k+1 updates step k's
+      buffers in place instead of re-allocating the whole state;
+    - per-step losses/accuracies accumulate on device and come back as
+      (S,) arrays — one host sync per chunk instead of per step;
+    - the rng chain matches the per-step loop exactly (``rng, sub =
+      split(rng)`` before each step), so chunked training is numerically
+      identical to ``make_train_step`` iterated S times.
+
+    Like ``make_train_step`` it rides the process-wide executable cache
+    when the model/optimizer are cache-keyable.
+    """
+
+    def loss_fn(params, xb, yb, rng):
+        logits = model.apply(params, xb, rng) if needs_rng else model.apply(
+            params, xb
+        )
+        return mse_softmax_loss(logits, yb, num_classes), logits
+
+    def chunk_impl(params, opt_state, step0, xs, ys, rng):
+        def body(carry, batch):
+            params, opt_state, step, rng = carry
+            xb, yb = batch
+            rng, sub = jax.random.split(rng)
+            (loss, logits), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, xb, yb, sub)
+            params, opt_state = optimizer.update(grads, opt_state, params,
+                                                 step)
+            return ((params, opt_state, step + 1, rng),
+                    (loss, accuracy(logits, yb)))
+
+        carry = (params, opt_state, jnp.asarray(step0, jnp.int32), rng)
+        (params, opt_state, _, rng), (losses, accs) = jax.lax.scan(
+            body, carry, (xs, ys)
+        )
+        return params, opt_state, rng, losses, accs
+
+    donate_n = (0, 1) if donate else ()
+    skey = _train_static_key("donn_train_chunk", model, optimizer,
+                             num_classes, needs_rng, donate)
+    if skey is None:
+        return jax.jit(chunk_impl, donate_argnums=donate_n)
+    from repro.core import propagation as pp
+
+    def chunk_fn(params, opt_state, step0, xs, ys, rng):
+        args = (params, opt_state, jnp.asarray(step0), jnp.asarray(xs),
+                jnp.asarray(ys), rng)
+        ex = pp.cached_executable(skey, chunk_impl, *args,
+                                  donate_argnums=donate_n)
+        return ex(*args)
+
+    return chunk_fn
 
 
 def train_classifier(
@@ -93,24 +212,64 @@ def train_classifier(
     needs_rng: bool = False,
     rng: Optional[jax.Array] = None,
     log_every: int = 0,
+    steps_per_call: int = 1,
+    prefetch: int = 2,
 ) -> TrainResult:
-    """Compact Adam training loop for DONN classifiers (paper uses Adam+MSE)."""
+    """Compact Adam training loop for DONN classifiers (paper uses Adam+MSE).
+
+    ``steps_per_call > 1`` switches to the chunked throughput driver
+    (``make_train_chunk``): batches stack into device-resident chunks fed
+    through the double-buffered device prefetcher, each chunk runs
+    ``steps_per_call`` donated optimizer steps inside one compiled scan,
+    and the host syncs once per chunk.  Numerics (losses, rng chain, final
+    params) are identical to the per-step path.  ``prefetch`` bounds the
+    prefetcher's in-flight chunk count (0 disables it).
+    """
     optimizer = AdamW(lr=lr)
     opt_state = optimizer.init(params)
-    step_fn = make_train_step(model, optimizer, num_classes, needs_rng)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     losses, accs = [], []
     t0 = time.perf_counter()
-    for i in range(steps):
-        xb, yb = next(data_iter)
-        rng, sub = jax.random.split(rng)
-        params, opt_state, loss, acc = step_fn(
-            params, opt_state, jnp.asarray(i), xb, yb, sub
+    if steps_per_call <= 1:
+        step_fn = make_train_step(model, optimizer, num_classes, needs_rng)
+        for i in range(steps):
+            xb, yb = next(data_iter)
+            rng, sub = jax.random.split(rng)
+            params, opt_state, loss, acc = step_fn(
+                params, opt_state, jnp.asarray(i), xb, yb, sub
+            )
+            losses.append(float(loss))
+            accs.append(float(acc))
+            if log_every and (i % log_every == 0):
+                print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                      f"acc {accs[-1]:.3f}")
+        return TrainResult(params, losses, accs, time.perf_counter() - t0)
+
+    from repro.data.pipeline import device_prefetch, stack_batches
+
+    # the chunk driver donates its state buffers; copy the caller's params
+    # once so their reference stays valid after training
+    params = jax.tree.map(jnp.array, params)
+    opt_state = jax.tree.map(jnp.array, opt_state)
+    chunk_fn = make_train_chunk(model, optimizer, num_classes, needs_rng)
+    chunks = stack_batches(data_iter, steps_per_call, total=steps)
+    if prefetch:
+        chunks = device_prefetch(chunks, size=prefetch)
+    i = 0
+    for xs, ys in chunks:
+        params, opt_state, rng, closs, cacc = chunk_fn(
+            params, opt_state, i, xs, ys, rng
         )
-        losses.append(float(loss))
-        accs.append(float(acc))
-        if log_every and (i % log_every == 0):
-            print(f"step {i:4d}  loss {losses[-1]:.4f}  acc {accs[-1]:.3f}")
+        closs, cacc = np.asarray(closs), np.asarray(cacc)  # one sync/chunk
+        losses.extend(closs.tolist())
+        accs.extend(cacc.tolist())
+        if log_every:
+            # same lines the per-step path prints, emitted at chunk sync
+            for j in range(int(xs.shape[0])):
+                if (i + j) % log_every == 0:
+                    print(f"step {i + j:4d}  loss {closs[j]:.4f}  "
+                          f"acc {cacc[j]:.3f}")
+        i += int(xs.shape[0])
     return TrainResult(params, losses, accs, time.perf_counter() - t0)
 
 

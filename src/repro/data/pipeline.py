@@ -1,7 +1,13 @@
-"""Data pipeline runtime: background prefetch + straggler/step-time monitor.
+"""Data pipeline runtime: background + device prefetch, step-time monitor.
 
 - ``Prefetcher``: a worker thread keeps a bounded queue of ready batches
-  (host->device overlap); backpressure via queue bound.
+  (host-side overlap); backpressure via queue bound.
+- ``device_prefetch``: double-buffered *device* prefetch — ``jax.device_put``
+  of batch k+1 is issued while step k computes, so host->device transfer
+  overlaps compute (the feeder for the chunked training drivers).
+- ``stack_batches``: groups per-step batches into stacked ``(S, B, ...)``
+  chunks for the multi-step scanned train drivers
+  (``repro.core.train_utils.make_train_chunk``).
 - ``StepMonitor``: EMA step-time tracker that flags straggling steps/hosts
   (z-score over a rolling window) — the hook a pod-level controller uses
   for straggler mitigation (re-shard or evict) at scale.
@@ -14,6 +20,9 @@ import queue
 import threading
 import time
 from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
 
 
 class Prefetcher:
@@ -48,6 +57,57 @@ class Prefetcher:
                 raise self._err
             raise StopIteration
         return item
+
+
+def device_prefetch(it: Iterator, size: int = 2, sharding=None):
+    """Double-buffered device prefetch over an iterator of batch pytrees.
+
+    Keeps up to ``size`` batches in flight on device: ``jax.device_put`` is
+    asynchronous, so the transfer of batch k+1 (and beyond) overlaps the
+    computation consuming batch k instead of serializing with it — the
+    classic two-slot pipeline feeding an accelerator from host memory.
+    ``sharding`` optionally places every leaf with a target sharding
+    (e.g. the batch sharding of a sharded train step); ``None`` uses the
+    default device.
+
+    Yields the same pytrees as ``it``, with every leaf resident on device.
+    """
+    if size < 1:
+        raise ValueError("device_prefetch needs size >= 1")
+    put = lambda leaf: jax.device_put(leaf, sharding)
+    buf: collections.deque = collections.deque()
+    for item in it:
+        buf.append(jax.tree.map(put, item))
+        if len(buf) >= size:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()
+
+
+def stack_batches(it: Iterator, steps_per_call: int,
+                  total: Optional[int] = None):
+    """Group per-step batches into stacked ``(S, B, ...)`` chunk pytrees.
+
+    Pulls up to ``total`` batches from ``it`` (all of them when ``None``)
+    and yields pytrees whose leaves gained a leading chunk axis of length
+    ``steps_per_call`` (the final chunk may be shorter) — the input format
+    of the multi-step scanned train drivers, which run one optimizer step
+    per leading row inside a single compiled call.
+    """
+    if steps_per_call < 1:
+        raise ValueError("stack_batches needs steps_per_call >= 1")
+    chunk: list = []
+    pulled = 0
+    for batch in it:
+        chunk.append(batch)
+        pulled += 1
+        if len(chunk) == steps_per_call:
+            yield jax.tree.map(lambda *xs: np.stack(xs), *chunk)
+            chunk = []
+        if total is not None and pulled >= total:
+            break
+    if chunk:
+        yield jax.tree.map(lambda *xs: np.stack(xs), *chunk)
 
 
 class StepMonitor:

@@ -38,6 +38,23 @@ def _local_fft2(x, *, axis: str, k: int, inverse: bool):
     return x[:, 0]  # (B, H/k, W)
 
 
+def local_spectral_pair(axis: str, k: int):
+    """(fft2, ifft2) callables for *in-scan* pencil-decomposed hops.
+
+    Unlike ``pencil_fft2`` (which wraps its own ``shard_map``), these run
+    the per-shard body directly, for use *inside* an enclosing ``shard_map``
+    whose fields are row-sharded ``(B, H/k, W)`` over mesh axis ``axis`` —
+    e.g. as the ``spectral=`` override of ``PropagationPlan.forward`` /
+    ``apply``, which puts the distributed FFT inside the fused layer scan
+    (the sharded training path, ``repro.runtime.donn_steps.
+    compile_donn_train_step_spatial``).  Both return row-sharded spectra /
+    fields in the same layout, so the spectral TF multiply works on the
+    matching row shard of the transfer planes with no extra communication.
+    """
+    return (partial(_local_fft2, axis=axis, k=k, inverse=False),
+            partial(_local_fft2, axis=axis, k=k, inverse=True))
+
+
 def pencil_fft2(u, mesh: Mesh, axis: str = "model", inverse: bool = False):
     """FFT2 of u (B, H, W) with H sharded over ``axis`` on ``mesh``."""
     k = mesh.shape[axis]

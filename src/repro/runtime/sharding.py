@@ -47,6 +47,18 @@ DEFAULT_RULES: dict[str, Any] = {
 }
 
 
+def spatial_rules(axis: str = "model") -> dict:
+    """Row-sharded DONN spatial layout (pencil FFT inside the scan body).
+
+    The in-scan distributed spectral hop keeps fields, TF planes and
+    trainable phases sharded along H (``field_h``) over one mesh axis —
+    ``repro.runtime.pencil_fft.local_spectral_pair`` transposes to/from
+    the W-sharded layout internally per FFT.  ``field_w`` replicates (it
+    is the locally-full axis between transposes).
+    """
+    return {**DEFAULT_RULES, "field_h": axis, "field_w": None}
+
+
 def _axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

@@ -70,6 +70,95 @@ SUITE = textwrap.dedent("""
                                                  np.asarray(u),
                                                  rtol=2e-3, atol=2e-3))
 
+    # 2b. pencil FFT gradients: value_and_grad of the distributed
+    # angular-spectrum hop agrees with the single-device spectral hop
+    from repro.runtime.pencil_fft import propagate_tf_distributed
+    h = jnp.asarray(rr.normal(size=(64, 128))
+                    + 1j * rr.normal(size=(64, 128)), jnp.complex64)
+
+    def loss_dist(v):
+        return jnp.sum(jnp.abs(propagate_tf_distributed(v, h, mesh8)) ** 2)
+
+    def loss_ref(v):
+        return jnp.sum(jnp.abs(jnp.fft.ifft2(jnp.fft.fft2(v) * h)) ** 2)
+
+    vd, gd = jax.value_and_grad(loss_dist)(u)
+    vr, gr = jax.value_and_grad(loss_ref)(u)
+    g_scale = float(jnp.max(jnp.abs(gr)))
+    results["pencil_grad_val_rel_err"] = abs(float(vd) - float(vr)) / abs(
+        float(vr))
+    results["pencil_grad_max_rel_err"] = float(
+        jnp.max(jnp.abs(gd - gr))) / g_scale
+    results["pencil_grad_ok"] = bool(
+        results["pencil_grad_val_rel_err"] <= 1e-5
+        and results["pencil_grad_max_rel_err"] <= 1e-5)
+
+    # 2c. in-scan usage: the spatially-sharded DONN training loss (pencil
+    # FFT inside the fused layer scan, row-sharded planes) matches the
+    # single-device step — loss and grads to rtol <= 1e-5, and one
+    # compiled spatial train step tracks the reference step
+    from repro.core.config import DONNConfig
+    from repro.core.models import cached_model
+    from repro.core.train_utils import mse_softmax_loss
+    from repro.nn import init_params
+    from repro.runtime import donn_steps as ds
+
+    cfg_sp = DONNConfig(name="sp", n=64, depth=4, distance=0.05, det_size=8)
+    sspecs_sp = ds.donn_state_specs(cfg_sp)
+    state_sp = init_params(sspecs_sp, jax.random.PRNGKey(0))
+    rsp = np.random.default_rng(3)
+    batch_sp = {
+        "images": rsp.uniform(0, 1, (8, 28, 28)).astype(np.float32),
+        "labels": rsp.integers(0, 10, (8,)).astype(np.int32),
+    }
+    loss_sp = ds.make_donn_spatial_loss(cfg_sp, mesh8)
+    donn = cached_model(cfg_sp)
+    loss_1d = lambda p, b: mse_softmax_loss(
+        donn.apply(p, b["images"]), b["labels"], cfg_sp.num_classes)
+    v1, g1 = jax.jit(jax.value_and_grad(loss_1d))(state_sp["params"],
+                                                  batch_sp)
+    v2, g2 = jax.jit(jax.value_and_grad(loss_sp))(state_sp["params"],
+                                                  batch_sp)
+    gmax = max(float(jnp.max(jnp.abs(g)))
+               for g in jax.tree.leaves(g1))
+    results["spatial_loss_rel_err"] = abs(float(v1) - float(v2)) / abs(
+        float(v1))
+    results["spatial_grad_max_rel_err"] = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2))
+    ) / gmax
+    results["spatial_loss_grads_ok"] = bool(
+        results["spatial_loss_rel_err"] <= 1e-5
+        and results["spatial_grad_max_rel_err"] <= 1e-5)
+
+    from repro.optim import AdamW as _AdamW
+    fn_sp, s_sh_sp, b_sh_sp, _ = ds.compile_donn_train_step_spatial(
+        cfg_sp, mesh8, optimizer=_AdamW(lr=0.05))
+    st_sp = jax.device_put(jax.tree.map(jnp.array, state_sp), s_sh_sp)
+    b_dev = jax.device_put(batch_sp, b_sh_sp)
+    ref_step = jax.jit(ds.make_donn_train_step(cfg_sp, _AdamW(lr=0.05)))
+    st_ref = jax.tree.map(jnp.array, state_sp)
+    sp_losses, ref_losses = [], []
+    for _ in range(2):
+        st_sp, m_sp = fn_sp(st_sp, b_dev)
+        st_ref, m_ref = ref_step(st_ref, batch_sp)
+        sp_losses.append(float(m_sp["loss"]))
+        ref_losses.append(float(m_ref["loss"]))
+    p_scale = max(float(jnp.max(jnp.abs(p)))
+                  for p in jax.tree.leaves(st_ref["params"]))
+    results["spatial_step_param_rel_err"] = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(st_sp["params"]),
+            jax.tree.leaves(st_ref["params"]))
+    ) / p_scale
+    # losses track at the grad tolerance; the *param* tolerance is looser
+    # because Adam's normalized update amplifies O(1e-6) grad differences
+    # to O(lr) wherever the gradient is near zero (sign flips in
+    # mh/sqrt(vh)) — inherent to Adam, not to the sharded forward
+    results["spatial_step_ok"] = bool(
+        np.allclose(sp_losses, ref_losses, rtol=1e-5, atol=1e-7)
+        and results["spatial_step_param_rel_err"] <= 2e-3)
+
     # 3. compressed psum over a pod axis (shard_map)
     from repro.compat import shard_map
     from repro.optim.compression import compressed_psum_mean
@@ -128,6 +217,25 @@ def test_dp_tp_matches_single_device(suite_results):
 def test_pencil_fft_matches_fft2(suite_results):
     assert suite_results["pencil_fft_ok"]
     assert suite_results["pencil_ifft_ok"]
+
+
+def test_pencil_fft_gradients_match_single_device(suite_results):
+    assert suite_results["pencil_grad_ok"], (
+        suite_results["pencil_grad_val_rel_err"],
+        suite_results["pencil_grad_max_rel_err"],
+    )
+
+
+def test_spatial_train_loss_and_grads_match(suite_results):
+    assert suite_results["spatial_loss_grads_ok"], (
+        suite_results["spatial_loss_rel_err"],
+        suite_results["spatial_grad_max_rel_err"],
+    )
+
+
+def test_spatial_train_step_tracks_reference(suite_results):
+    assert suite_results["spatial_step_ok"], suite_results[
+        "spatial_step_param_rel_err"]
 
 
 def test_compressed_psum(suite_results):

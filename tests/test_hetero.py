@@ -539,6 +539,7 @@ _FIELD_ALTERNATES = {
     "input_size": 14,
     "scan_unroll": 2,
     "tf_dtype": "bfloat16",
+    "remat": "layer",
 }
 
 # fields whose change must also re-key the *plan* (propagation numerics);
@@ -547,6 +548,7 @@ _PLAN_FIELDS = (
     "n", "pixel_size", "wavelength", "distance", "distances", "depth",
     "approximation", "band_limit", "pad", "codesign", "device_levels",
     "response_gamma", "layers", "use_pallas", "scan_unroll", "tf_dtype",
+    "remat",
 )
 
 
