@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
   table5      -> bench_rgb          fig13 -> bench_segmentation
   hetero      -> bench_hetero (segmented plans + ragged-depth DSE)
   train_throughput -> bench_train_throughput (chunked training drivers)
+  inference_throughput -> bench_inference_throughput (deployment engine)
   (env)       -> bench_roofline (reads the dry-run artifacts)
 
 Usage: ``python benchmarks/run.py [--check] [filter ...]`` — any number
@@ -31,7 +32,7 @@ import traceback
 
 # suites whose cells gate CI: they must be fresh in the uploaded summary
 TIER1_SUITES = ("propagation_plan", "dse_batched", "hetero",
-                "train_throughput")
+                "train_throughput", "inference_throughput")
 
 
 def stale_tier1(summary: dict) -> list:
@@ -79,6 +80,7 @@ def main() -> None:
         bench_dse_batched,
         bench_energy,
         bench_hetero,
+        bench_inference_throughput,
         bench_kernel_breakdown,
         bench_propagation_plan,
         bench_regularization,
@@ -100,6 +102,7 @@ def main() -> None:
         ("dse_batched", bench_dse_batched.main),
         ("hetero", bench_hetero.main),
         ("train_throughput", bench_train_throughput.main),
+        ("inference_throughput", bench_inference_throughput.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),

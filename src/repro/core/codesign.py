@@ -152,6 +152,22 @@ def to_3d_render(
     return (phi_w * wavelength / (TWO_PI * delta_n)).astype(np.float32)
 
 
+def deployed_phase(
+    phi: jax.Array, dev: Optional[DeviceSpec], mode: str
+) -> jax.Array:
+    """Deploy-time (rng-free) device response: the phase the hardware holds.
+
+    At deployment the device state is *statically known* — the SLM is
+    programmed / the mask is printed once — so the codesign response is
+    resolved a single time instead of per forward pass.  Stochastic
+    training modes resolve to their deterministic eval form (Gumbel with
+    no noise), matching ``apply_codesign(..., rng=None)`` bit-for-bit;
+    this is the fold behind ``PropagationPlan.frozen_modulation`` and the
+    ``repro.runtime.inference`` deployment engine.
+    """
+    return apply_codesign(phi, dev, mode, rng=None)
+
+
 def apply_codesign(
     phi: jax.Array,
     dev: Optional[DeviceSpec],

@@ -59,6 +59,30 @@ class Grid:
         return (np.arange(self.n) - (self.n - 1) / 2.0) * self.pixel_size
 
 
+def fresnel_tf_centered(
+    grid: Grid, z: float, wavelength: float, pad: bool = False
+) -> np.ndarray:
+    """Fresnel transfer function over *centered* (fftshift-ordered) freqs.
+
+    The textbook spelling: H lives on the centered frequency grid, so a hop
+    using it must bracket the spectral multiply with an fftshift/ifftshift
+    pair — ``ifft2(ifftshift(H_c * fftshift(fft2(u))))``.  The propagation
+    engine never pays those two shifts per layer: ``transfer_function``
+    pre-folds the pair into the cached plane at build time
+    (``ifftshift(H_c)`` is stored, which is exactly H over natural fftfreq
+    ordering), so the runtime hop is a bare ``ifft2(fft2(u) * H)``.
+    Parity between the two spellings is pinned by
+    tests/test_diffraction.py::test_fresnel_prefolded_shift_pair.
+    """
+    f = np.fft.fftshift(grid.freqs(pad=pad))
+    fx, fy = np.meshgrid(f, f, indexing="ij")
+    k = 2.0 * math.pi / wavelength
+    return (
+        np.exp(1j * k * z)
+        * np.exp(-1j * math.pi * wavelength * z * (fx**2 + fy**2))
+    ).astype(np.complex64)
+
+
 def transfer_function(
     grid: Grid,
     z: float,
@@ -69,7 +93,10 @@ def transfer_function(
 ) -> np.ndarray:
     """Free-space transfer function H(fx, fy) on the (possibly padded) grid.
 
-    Returned as a numpy complex64 array (static geometry => build-time const).
+    Returned as a numpy complex64 array (static geometry => build-time
+    const).  Planes are stored *pre-shifted* — natural ``fftfreq`` ordering
+    — so the runtime hop is shift-free; see ``fresnel_tf_centered`` for the
+    centered spelling the fold starts from.
     """
     if method not in (RS, FRESNEL):
         raise ValueError(f"transfer_function supports rs|fresnel, got {method}")
@@ -84,10 +111,10 @@ def transfer_function(
         kappa = k * np.sqrt(np.maximum(-arg, 0.0))
         h = np.where(prop, np.exp(1j * kz * z), np.exp(-kappa * abs(z)))
     else:
-        # Fresnel TF: H = exp(jkz) exp(-j pi lambda z (fx^2 + fy^2))
-        h = np.exp(1j * k * z) * np.exp(
-            -1j * math.pi * wavelength * z * (fx**2 + fy**2)
-        )
+        # centered Fresnel plane with the fftshift/ifftshift pair folded in
+        # at build time: each cached fresnel hop drops two shifts per layer
+        # (the shift is a permutation, so the fold is bit-exact)
+        h = np.fft.ifftshift(fresnel_tf_centered(grid, z, wavelength, pad))
     if band_limit:
         # Matsushima & Shimobaba band-limited angular spectrum
         n = 2 * grid.n if pad else grid.n

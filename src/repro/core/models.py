@@ -27,6 +27,26 @@ from repro.core.propagation import plan_from_config
 from repro.nn import ParamSpec, init_params
 
 
+def channel_readout(u: jax.Array, masks, use_pallas: bool) -> jax.Array:
+    """Multi-channel detector accumulation, shared by every path.
+
+    (..., C, n, n) per-channel output fields -> (..., num_classes): the
+    incoherent channel sum pooled over the per-class detector regions,
+    through the fused Pallas kernel under ``use_pallas`` or a single jnp
+    contraction otherwise.  One definition serves training
+    (``MultiChannelDONN.apply``, both engines), batched DSE emulation
+    (``emulate_batch``) and the deployment engine
+    (``repro.runtime.inference``), so the fallback contraction and kernel
+    routing cannot drift between them.
+    """
+    masks = jnp.asarray(masks)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.channel_intensity_readout(u.real, u.imag, masks)
+    return jnp.einsum("...dhw,chw->...c", df.intensity(u), masks)
+
+
 def _build_layers(cfg: DONNConfig, gamma: float):
     """Eager per-layer stack from the (possibly heterogeneous) config.
 
@@ -187,15 +207,13 @@ class MultiChannelDONN:
             def one_channel(phases, xc):
                 p = {"phase": phases}
                 u = cm.fields(p, xc, rng)[-1]
-                return df.intensity(u)
+                return u
 
             # vmap over the channel axis of both params and inputs
-            inten = jax.vmap(one_channel, in_axes=(0, -3), out_axes=0)(
+            u = jax.vmap(one_channel, in_axes=(0, -3), out_axes=-3)(
                 params["phase"], x
-            )
-            total = jnp.sum(inten, axis=0)  # incoherent sum on shared detector
-            masks = jnp.asarray(cm.detector.masks)
-            return jnp.einsum("...hw,chw->...c", total, masks)
+            )  # (..., C, n, n) per-channel output fields
+            return channel_readout(u, cm.detector.masks, self.cfg.use_pallas)
         # batched plan path: all channels propagate as one (..., C, N, N)
         # tensor through shared kernels (the TFs are channel-independent;
         # the (L, C, N, N) phase stack rides the scan — per segment for
@@ -205,15 +223,7 @@ class MultiChannelDONN:
         )
         u = data_to_cplex(x, cm.in_grid.n) * jnp.asarray(cm.source)
         u = cm.plan.apply(phis, u, rng)
-        masks = jnp.asarray(cm.detector.masks)
-        if self.cfg.use_pallas:
-            from repro.kernels import ops as kops
-
-            per_ch = kops.intensity_readout(u.real, u.imag, masks)
-            return jnp.sum(per_ch, axis=-2)
-        # one fused accumulation: channel sum + detector pooling in a
-        # single contraction over (channel, h, w)
-        return jnp.einsum("...dhw,chw->...c", df.intensity(u), masks)
+        return channel_readout(u, cm.detector.masks, self.cfg.use_pallas)
 
 
 class SegmentationDONN:
@@ -668,13 +678,7 @@ def emulate_batch(cfgs: Sequence[DONNConfig], params, x, rng=None,
                 return inten
             u = template.apply(p, u, r, tfs=tfs, mask=m)
             if family == "multi":
-                masks = jnp.asarray(det.masks)
-                if base.use_pallas:
-                    from repro.kernels import ops as kops
-
-                    per_ch = kops.intensity_readout(u.real, u.imag, masks)
-                    return jnp.sum(per_ch, axis=-2)
-                return jnp.einsum("...dhw,chw->...c", df.intensity(u), masks)
+                return channel_readout(u, det.masks, base.use_pallas)
             return det(u)
 
         per_cand = {k: v for k, v in inp.items() if k != "x"}

@@ -342,6 +342,50 @@ class PropagationPlan:
         ur, ui = kops.phase_tf_apply(u.real, u.imag, phi, amp)
         return jax.lax.complex(ur, ui)
 
+    def _modulate_frozen(self, u: jax.Array, pair) -> jax.Array:
+        """Modulate by one layer's *precomputed* modulation plane pair.
+
+        The deployment fast path: codesign response and ``gamma * exp(j
+        theta)`` were folded once at freeze time (``frozen_modulation``),
+        so per-request work is a single fused multiply — the polar pair
+        feeds the fused Pallas kernel directly, the cartesian pair a bare
+        complex multiply.  Numerics are bit-identical to ``_modulate`` on
+        the codesign-resolved phase (same kernels, same operand values).
+        """
+        a, b = pair
+        if not self.use_pallas:
+            return u * jax.lax.complex(a, b)  # (mr, mi) = gamma * exp(j phi)
+        from repro.kernels import ops as kops
+
+        ur, ui = kops.phase_tf_apply(u.real, u.imag, a, b)  # (theta, amp)
+        return jax.lax.complex(ur, ui)
+
+    def frozen_modulation(self, phis: jax.Array) -> tuple:
+        """Deploy-time fold: device response + ``gamma*exp(j phi)`` once.
+
+        ``phis`` is the trained (L, ...) phase stack.  The codesign device
+        response is resolved rng-free (``codesign.deployed_phase`` — the
+        statically-known state the fabricated hardware holds) and the
+        modulation ``gamma * exp(j phi_eff)`` is precomputed into a split
+        plane pair in the plan's kernel convention: polar ``(theta, amp)``
+        consumed directly by the fused ``phase_tf_apply`` kernel under
+        ``use_pallas``, cartesian ``(mr, mi)`` for the jnp path.  Feed the
+        result to ``forward``/``apply`` via ``frozen=`` — the per-request
+        hot path then skips phase-stack construction, quantization and
+        codesign rng entirely (bit-identical to the training-path forward
+        at eval, tests/test_inference.py).
+        """
+
+        def fold(p):
+            eff = self._codesign_stack(p, None)
+            if self.use_pallas:
+                return eff, jnp.full(eff.shape, self.gamma, eff.dtype)
+            m = self.gamma * jnp.exp(1j * eff.astype(jnp.complex64))
+            return m.real, m.imag
+
+        a, b = jax.jit(fold)(jnp.asarray(phis))
+        return a, b
+
     def _hop(self, u: jax.Array, pair, spectral=None) -> jax.Array:
         """One free-space gap with a prepared TF plane pair.
 
@@ -409,7 +453,8 @@ class PropagationPlan:
 
     def forward(self, phis: jax.Array, u: jax.Array, rngs=None,
                 start: int = 0, stop: Optional[int] = None,
-                tfs=None, mask=None, pre=None, spectral=None) -> jax.Array:
+                tfs=None, mask=None, pre=None, spectral=None,
+                frozen=None) -> jax.Array:
         """Scan layers [start, stop) over the field u.
 
         phis: full (L, ...) phase stack (codesign is applied to the whole
@@ -427,7 +472,12 @@ class PropagationPlan:
         first hop instead of running as a detached einsum);
         spectral: optional (fft2, ifft2) override for every hop in the
         scan body — the distributed pencil-FFT path
-        (``repro.runtime.pencil_fft.local_spectral_pair``).
+        (``repro.runtime.pencil_fft.local_spectral_pair``);
+        frozen: optional precomputed (L, ...) modulation plane pair from
+        ``frozen_modulation`` — the deployment fast path.  With it the
+        scan skips phase-stack codesign (quantization, rng) entirely and
+        each layer is one hop plus one fused multiply; ``phis``/``rngs``/
+        ``mask`` are ignored (pass None).
 
         The plan's ``remat`` policy wraps the body (``"layer"``) or the
         whole scan (``"segment"``) in ``jax.checkpoint``.
@@ -435,8 +485,31 @@ class PropagationPlan:
         stop = self.depth if stop is None else stop
         if pre is not None:
             u = pre(u)
-        phi_eff = self._codesign_stack(phis, rngs)
         a, b = self._tf_pair() if tfs is None else tfs
+        if frozen is not None:
+            fa, fb = frozen
+            xs = (a[start:stop], b[start:stop], fa[start:stop],
+                  fb[start:stop])
+
+            def body(carry, layer):
+                a_l, b_l, fa_l, fb_l = layer
+                carry = self._modulate_frozen(
+                    self._hop(carry, (a_l, b_l), spectral), (fa_l, fb_l)
+                )
+                return carry, None
+
+            if self.remat == "layer":
+                body = jax.checkpoint(body)
+
+            def run(u0, xs_):
+                out, _ = jax.lax.scan(body, u0, xs_,
+                                      unroll=self._scan_unroll(stop - start))
+                return out
+
+            if self.remat == "segment":
+                run = jax.checkpoint(run)
+            return run(u, xs)
+        phi_eff = self._codesign_stack(phis, rngs)
         if mask is None:
             xs = (a[start:stop], b[start:stop], phi_eff[start:stop])
 
@@ -482,12 +555,20 @@ class PropagationPlan:
         return self._hop(u, (a[self.depth], b[self.depth]), spectral)
 
     def apply(self, phis: jax.Array, u: jax.Array, rng=None,
-              tfs=None, mask=None, spectral=None) -> jax.Array:
+              tfs=None, mask=None, spectral=None, frozen=None) -> jax.Array:
         """Full stack: scan all layers then the final hop.
 
         rng is a single key (split into per-layer keys here, mirroring the
-        eager model) or None.
+        eager model) or None.  ``frozen`` takes a precomputed modulation
+        plane pair (``frozen_modulation``) — the deployment fast path; rng
+        and phis are then unused.
         """
+        if frozen is not None:
+            return self.propagate_final(
+                self.forward(None, u, tfs=tfs, spectral=spectral,
+                             frozen=frozen),
+                tfs=tfs, spectral=spectral,
+            )
         rngs = jax.random.split(rng, self.depth) if rng is not None else None
         return self.propagate_final(
             self.forward(phis, u, rngs, tfs=tfs, mask=mask,
@@ -624,13 +705,27 @@ class SegmentedPlan:
             jnp.stack(phases[lo:hi]) for lo, hi in self.slices
         )
 
+    def frozen_modulation(self, phis) -> tuple:
+        """Per-segment deploy-time fold (see ``PropagationPlan``'s).
+
+        ``phis`` is the per-segment pytree from ``stack_phases``; returns
+        one modulation plane pair per segment, in segment order — the
+        ``frozen=`` input of this plan's ``forward``/``apply``.
+        """
+        return tuple(
+            seg.frozen_modulation(p) for seg, p in zip(self.segments, phis)
+        )
+
     # --- forward ---
     def forward(self, phis, u: jax.Array, rngs=None, start: int = 0,
-                stop: Optional[int] = None, tfs=None) -> jax.Array:
+                stop: Optional[int] = None, tfs=None,
+                frozen=None) -> jax.Array:
         """Run global layers [start, stop); ``phis`` is the per-segment
         pytree from ``stack_phases``.  The incoming field must live on the
         grid of layer ``start - 1`` (the input grid when start == 0); the
-        returned field lives on the grid of layer ``stop - 1``."""
+        returned field lives on the grid of layer ``stop - 1``.
+        ``frozen`` takes the per-segment pair tuple from this plan's
+        ``frozen_modulation`` (deployment fast path; phis/rngs unused)."""
         if tfs is not None:
             raise NotImplementedError(
                 "external transfer planes are a uniform-plan feature "
@@ -653,9 +748,13 @@ class SegmentedPlan:
                 src = cur_grid
                 stitch = lambda v, s=src, g=seg.grid: df.resample_field(
                     v, s, g)
-            seg_rngs = rngs[lo:hi] if rngs is not None else None
-            u = seg.forward(phis[k], u, seg_rngs, start=a - lo, stop=b - lo,
-                            pre=stitch)
+            if frozen is not None:
+                u = seg.forward(None, u, start=a - lo, stop=b - lo,
+                                pre=stitch, frozen=frozen[k])
+            else:
+                seg_rngs = rngs[lo:hi] if rngs is not None else None
+                u = seg.forward(phis[k], u, seg_rngs, start=a - lo,
+                                stop=b - lo, pre=stitch)
             cur_grid = seg.grid
         return u
 
@@ -667,7 +766,12 @@ class SegmentedPlan:
         u = self.segments[-1].propagate_final(u)
         return df.resample_field(u, self.segments[-1].grid, self.det_grid)
 
-    def apply(self, phis, u: jax.Array, rng=None, tfs=None) -> jax.Array:
+    def apply(self, phis, u: jax.Array, rng=None, tfs=None,
+              frozen=None) -> jax.Array:
+        if frozen is not None:
+            return self.propagate_final(
+                self.forward(None, u, tfs=tfs, frozen=frozen)
+            )
         rngs = jax.random.split(rng, self.depth) if rng is not None else None
         return self.propagate_final(self.forward(phis, u, rngs, tfs=tfs))
 

@@ -8,6 +8,10 @@
 - ``stack_batches``: groups per-step batches into stacked ``(S, B, ...)``
   chunks for the multi-step scanned train drivers
   (``repro.core.train_utils.make_train_chunk``).
+- ``bucket_for`` / ``pad_batch``: shape-bucketing helpers for the serving
+  path (``repro.runtime.inference``) — requests pad up to the nearest
+  compiled bucket, always into a fresh buffer so donation can't alias a
+  live request.
 - ``StepMonitor``: EMA step-time tracker that flags straggling steps/hosts
   (z-score over a rolling window) — the hook a pod-level controller uses
   for straggler mitigation (re-shard or evict) at scale.
@@ -108,6 +112,36 @@ def stack_batches(it: Iterator, steps_per_call: int,
             break
     if chunk:
         yield jax.tree.map(lambda *xs: np.stack(xs), *chunk)
+
+
+def bucket_for(size: int, buckets) -> int:
+    """Smallest serving bucket >= ``size`` (the largest bucket if none is).
+
+    Shape-bucketed serving compiles one executable per bucket; a request
+    batch is padded up to the bucket it lands in, and batches larger than
+    the biggest bucket are chunked by the caller
+    (``repro.runtime.inference.InferenceEngine``).
+    """
+    if size < 1:
+        raise ValueError("bucket_for needs size >= 1")
+    fitting = [b for b in buckets if b >= size]
+    return min(fitting) if fitting else max(buckets)
+
+
+def pad_batch(x: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad rows of ``x`` (B, ...) up to ``bucket`` rows (fresh buffer).
+
+    Always returns a *new* host array — even when B == bucket — so a
+    downstream donated device upload can never alias a live request
+    buffer (the caller's array survives the donation; see
+    tests/test_inference.py::TestDonationSafety).
+    """
+    x = np.asarray(x)
+    if x.shape[0] > bucket:
+        raise ValueError(f"batch of {x.shape[0]} does not fit bucket {bucket}")
+    out = np.zeros((bucket,) + x.shape[1:], x.dtype)
+    out[: x.shape[0]] = x
+    return out
 
 
 class StepMonitor:

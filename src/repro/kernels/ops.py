@@ -295,6 +295,28 @@ def intensity_readout(ur, ui, masks):
     return out
 
 
+@jax.jit
+def channel_intensity_readout(ur, ui, masks):
+    """(..., C, H, W) multi-channel fields + (K, H, W) masks -> (..., K).
+
+    The multi-channel DONN detector accumulation: per-channel fused
+    intensity readout (one Pallas pass per plane slab) followed by the
+    incoherent channel sum.  Shared by ``MultiChannelDONN`` (plan and
+    eager paths), ``emulate_batch`` and the deployment inference engine so
+    every batched path accumulates through the same fused kernel.
+
+    Coverage audit (ISSUE-5): with this helper in place every scan-plan /
+    batched detector accumulation routes through ``intensity_readout``
+    under ``use_pallas`` — ``Detector.__call__`` (classify, DSE ``cls``
+    family), this channel sum (RGB plan + eager + ``multi`` family).  The
+    remaining jnp einsum readouts are the documented non-Pallas fallbacks
+    and the spatially-sharded step (``donn_steps.make_donn_spatial_loss``),
+    which gates ``use_pallas`` off because its planes are row shards.
+    """
+    per_ch = intensity_readout(ur, ui, masks)  # (..., C, K)
+    return jnp.sum(per_ch, axis=-2)
+
+
 # --------------------------------------------------------------------------
 # apply_rope: unitary rotation; VJP rotates cotangent by -theta.
 # --------------------------------------------------------------------------

@@ -1,0 +1,126 @@
+"""DONN serving launcher: freeze a trained model, serve a request stream.
+
+The deployment end of the train -> freeze -> serve flow: builds a DONN
+(optionally quick-trains it on the synthetic set), freezes it into a
+``DeployedDONN`` artifact (codesign response + modulation planes folded
+once), warms the bucketed AOT executables, then drives a synthetic
+request load through the micro-batching dispatcher and reports
+requests/sec plus latency percentiles.
+
+Offline demo at laptop scale; the same engine objects back the
+throughput benchmark (``benchmarks/bench_inference_throughput.py``).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve_donn --family classify \
+      --n 64 --depth 4 --codesign qat --requests 256 --max-wait-ms 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import DONNConfig, build_model
+from repro.runtime.inference import (
+    DEFAULT_BUCKETS, InferenceEngine, MicroBatcher, freeze,
+)
+
+
+def build_cfg(args) -> DONNConfig:
+    kw = dict(
+        name=f"serve-{args.family}", n=args.n, depth=args.depth,
+        distance=args.distance, det_size=args.det_size,
+        codesign=args.codesign, response_gamma=args.response_gamma,
+        use_pallas=args.use_pallas,
+    )
+    if args.family == "rgb":
+        kw["channels"] = 3
+    elif args.family == "segmentation":
+        kw.update(segmentation=True, skip_from=0, layer_norm=True)
+    return DONNConfig(**kw)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="classify",
+                    choices=("classify", "rgb", "segmentation"))
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--distance", type=float, default=0.05)
+    ap.add_argument("--det-size", type=int, default=8)
+    ap.add_argument("--codesign", default="qat")
+    ap.add_argument("--response-gamma", type=float, default=1.2,
+                    help="nonlinear device response (1.0 = ideal)")
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--train-steps", type=int, default=0,
+                    help="quick-train on synth digits before freezing")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="data-parallel dispatch over N devices (0 = off)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.train_steps > 0 and args.family == "classify":
+        from repro.core.train_utils import train_classifier
+        from repro.data import batch_iterator, synth_digits
+
+        xs, ys = synth_digits(512, seed=args.seed)
+        res = train_classifier(model, params,
+                               batch_iterator(xs, ys, 32, seed=1),
+                               steps=args.train_steps, lr=0.3,
+                               steps_per_call=8)
+        params = res.params
+        print(f"[serve_donn] trained {args.train_steps} steps "
+              f"({res.wall_time_s:.1f}s, final loss {res.losses[-1]:.4f})")
+
+    t0 = time.perf_counter()
+    deployed = freeze(model, params)
+    jax.block_until_ready(deployed.frozen)
+    t_freeze = time.perf_counter() - t0
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    engine = InferenceEngine(
+        deployed, buckets=buckets,
+        mesh_devices=args.mesh_devices or None,
+    )
+    compiles = engine.warmup()
+    print(f"[serve_donn] froze {cfg.name} in {t_freeze * 1e3:.0f}ms; "
+          f"warmed {len(compiles)} buckets in {sum(compiles.values()):.2f}s")
+
+    rng = np.random.default_rng(args.seed)
+    shape = ((3, 28, 28) if args.family == "rgb" else (28, 28))
+    reqs = [rng.random(shape, dtype=np.float32)
+            for _ in range(args.requests)]
+
+    mb = MicroBatcher(engine, max_wait_ms=args.max_wait_ms)
+    lat = []
+    t0 = time.perf_counter()
+    futs = []
+    for x in reqs:
+        futs.append((time.perf_counter(), mb.submit(x)))
+    for t_sub, f in futs:
+        f.result(timeout=120)
+        lat.append(time.perf_counter() - t_sub)
+    dt = time.perf_counter() - t0
+    mb.close()
+
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    p50 = lat_ms[len(lat_ms) // 2]
+    p99 = lat_ms[min(len(lat_ms) - 1, int(len(lat_ms) * 0.99))]
+    rps = args.requests / dt
+    print(f"[serve_donn] {args.requests} requests in {dt:.2f}s "
+          f"({rps:.1f} req/s; p50 {p50:.1f}ms p99 {p99:.1f}ms; "
+          f"{engine.stats['batches']} batches, "
+          f"{engine.stats['padded_rows']} padded rows, "
+          f"mesh={args.mesh_devices or 1})")
+    return rps
+
+
+if __name__ == "__main__":
+    main()

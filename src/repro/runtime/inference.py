@@ -1,0 +1,409 @@
+"""Deployment inference engine: frozen DONNs served fast (LightRidge pillar 3).
+
+PRs 1-4 optimized training, emulation and DSE; a *deployed* model still
+paid the full training-path forward on every request — per-call codesign
+quantization (a 256-level argmin/softmax per layer for realistic nonlinear
+devices), per-call ``exp(j theta)``, phase-stack construction, a fresh jit
+dispatch per request, and no batching across requests.  All of that is
+statically known at deploy time (the SLM is programmed / the mask is
+printed once — cf. the hybrid reconfigurable DONNs of arXiv 2411.05748 and
+the physics-aware discrete codesign of arXiv 2209.14252), so this module
+folds it out of the hot path entirely:
+
+1.  **Frozen artifact** — ``freeze(model, params)`` resolves the codesign
+    device response once (``codesign.deployed_phase``) and precomputes the
+    ``gamma * exp(j theta)`` modulation planes per layer
+    (``PropagationPlan.frozen_modulation``), in the kernel's native
+    convention (polar for the fused ``phase_tf_apply`` Pallas kernel,
+    cartesian split planes for the jnp path).  Per-request work shrinks to
+    the FFT hops plus one fused multiply per layer, via the
+    ``forward(frozen=...)`` fast path — bit-identical to the training-path
+    forward at eval (tests/test_inference.py).
+2.  **Bucketed AOT executables** — one compiled program per batch bucket,
+    riding ``cached_executable`` with the request buffer donated.
+    ``warmup(buckets=...)`` pays every compile at deploy time, so the
+    first request is served from a warm executable.
+3.  **Micro-batching** — ``MicroBatcher`` queues single requests and
+    launches on batch-full-or-deadline, padding the queued set to the
+    nearest bucket (``repro.data.pipeline.bucket_for`` / ``pad_batch``).
+4.  **Multi-device dispatch** — buckets at least ``dp_min_bucket`` wide
+    run data-parallel over the host mesh via ``shard_map`` on the batch
+    axis (each device runs the whole optical forward on its batch shard;
+    a DONN's phases are tiny, so pure DP is the right layout).
+
+Measured in ``benchmarks/bench_inference_throughput.py``; served by
+``repro.launch.serve_donn``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+from concurrent.futures import Future
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffraction as df
+from repro.core.laser import data_to_cplex
+from repro.data.pipeline import bucket_for, pad_batch
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+# --------------------------------------------------------------------------
+# Frozen deployment artifact
+# --------------------------------------------------------------------------
+class DeployedDONN:
+    """A trained DONN frozen for serving.
+
+    Holds the propagation plan, the precomputed modulation planes and the
+    (config-static) detector geometry — everything ``forward`` needs, and
+    nothing of the training machinery (params pytree, codesign rng,
+    quantizers).  Build with ``freeze(model, params)``.
+    """
+
+    def __init__(self, cfg, family: str, plan, frozen, source, in_n: int,
+                 detector=None, skip_from=None, skip_hop=None,
+                 out_grid=None):
+        self.cfg = cfg
+        self.family = family  # "cls" | "multi" | "seg"
+        self.plan = plan
+        self.frozen = frozen
+        self.source = jnp.asarray(source)
+        self.in_n = in_n
+        self.detector = detector
+        self.skip_from = skip_from
+        self.skip_hop = skip_hop
+        self.out_grid = out_grid
+        self.heterogeneous = cfg.is_heterogeneous()
+
+    # --- the deployment forward (bit-identical to model.apply at eval) ---
+    def forward(self, x: jax.Array, frozen=None) -> jax.Array:
+        """Batched frozen forward: images -> logits / intensity maps.
+
+        ``frozen`` optionally overrides the artifact's modulation planes —
+        the ``InferenceEngine`` passes them as *traced inputs* so every
+        deployment of one architecture shares a single compiled program
+        (same statics, different trained params).
+        """
+        frozen = self.frozen if frozen is None else frozen
+        u = data_to_cplex(x, self.in_n) * self.source
+        if self.family == "seg":
+            plan = self.plan
+            if self.skip_from is None:
+                u = plan.forward(None, u, frozen=frozen)
+                skip_u = None
+            else:
+                u = plan.forward(None, u, stop=self.skip_from + 1,
+                                 frozen=frozen)
+                skip_u = u
+                u = plan.forward(None, u, start=self.skip_from + 1,
+                                 frozen=frozen)
+            u = plan.propagate_final(u)
+            if skip_u is not None:
+                sk = self.skip_hop.propagate(skip_u)
+                sk = df.resample_field(sk, self.skip_hop.grid, self.out_grid)
+                u = (u + sk) / jnp.sqrt(2.0).astype(jnp.complex64)
+            return df.intensity(u)  # eval path: no train-time layer norm
+        u = self.plan.apply(None, u, frozen=frozen)
+        if self.family == "multi":
+            from repro.core.models import channel_readout
+
+            return channel_readout(u, self.detector.masks,
+                                   self.cfg.use_pallas)
+        return self.detector(u)
+
+    def static_key(self) -> tuple:
+        """Executable-cache identity: config statics only.
+
+        The trained modulation planes enter compiled programs as traced
+        inputs, so deployments of the same architecture with different
+        params share executables (and can never read each other's baked
+        constants).
+        """
+        from repro.core.models import config_static_key
+
+        return ("deployed_donn", self.family, config_static_key(self.cfg))
+
+
+def freeze(model, params) -> DeployedDONN:
+    """Fold a trained model + params into a serving artifact.
+
+    Covers all three model families (classify / RGB multi-channel /
+    segmentation incl. the optical skip), uniform and heterogeneous
+    (segmented-plan) stacks, every codesign mode (stochastic modes resolve
+    to their deterministic eval form, see ``codesign.deployed_phase``).
+    """
+    from repro.core import models as md
+
+    if isinstance(model, md.MultiChannelDONN):
+        cm = model.channel_model
+        phis = cm.plan.stack_phases(
+            params["phase"][f"layer_{i}"] for i in range(len(cm.layers))
+        )
+        return DeployedDONN(
+            model.cfg, "multi", cm.plan, cm.plan.frozen_modulation(phis),
+            cm.source, cm.in_grid.n, detector=cm.detector,
+        )
+    if isinstance(model, md.SegmentationDONN):
+        phis = model.plan.stack_phases(
+            params["phase"][f"layer_{i}"] for i in range(len(model.layers))
+        )
+        return DeployedDONN(
+            model.cfg, "seg", model.plan,
+            model.plan.frozen_modulation(phis), model.source,
+            model.in_grid.n, skip_from=model.skip_from,
+            skip_hop=getattr(model, "skip_hop", None), out_grid=model.grid,
+        )
+    if not isinstance(model, md.DONN):
+        raise TypeError(f"cannot freeze {type(model).__name__}")
+    return DeployedDONN(
+        model.cfg, "cls", model.plan,
+        model.plan.frozen_modulation(model.stacked_phases(params)),
+        model.source, model.in_grid.n, detector=model.detector,
+    )
+
+
+# --------------------------------------------------------------------------
+# Bucketed, donated, (optionally) data-parallel serving engine
+# --------------------------------------------------------------------------
+class InferenceEngine:
+    """Shape-bucketed AOT serving around a ``DeployedDONN``.
+
+    - one compiled executable per batch bucket (``cached_executable``:
+      deployments sharing architecture statics + bucket share programs);
+    - the padded request buffer is **donated** (requests are always padded
+      into a fresh buffer first — ``pad_batch`` — so donation can never
+      alias a live caller array);
+    - ``warmup()`` pays every bucket's compile at deploy time;
+    - buckets of at least ``dp_min_bucket`` rows dispatch data-parallel
+      over ``mesh_devices`` devices via ``shard_map`` on the batch axis.
+    """
+
+    def __init__(self, deployed: DeployedDONN,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 donate: bool = True, mesh_devices: Optional[int] = None,
+                 dp_min_bucket: int = 8):
+        self.deployed = deployed
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError("buckets must be positive ints")
+        self.donate = donate
+        self.dp_min_bucket = int(dp_min_bucket)
+        self.ndev = int(mesh_devices) if mesh_devices else 1
+        if self.ndev > jax.device_count():
+            raise ValueError(
+                f"mesh_devices={self.ndev} exceeds the {jax.device_count()} "
+                "available devices"
+            )
+        if self.ndev > 1 and deployed.heterogeneous:
+            raise NotImplementedError(
+                "multi-device dispatch covers uniform plans (segmented "
+                "frozen planes are a ragged pytree; flatten is a follow-on)"
+            )
+        self._mesh = None
+        self._x_sharding = None
+        if self.ndev > 1:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.compat import make_mesh
+
+            self._mesh = make_mesh((self.ndev,), ("data",))
+            self._x_sharding = NamedSharding(
+                self._mesh,
+                P(*(("data",) + (None,) * (self._x_ndim() - 1))),
+            )
+        # hot-path pin: {(input shape, dtype): compiled} — infer() does a
+        # plain dict lookup; cached_executable stays the cross-engine
+        # sharing layer behind it (first build per shape goes through it)
+        self._compiled: dict = {}
+        self.stats = {"requests": 0, "batches": 0, "padded_rows": 0}
+
+    # --- shapes ---
+    def _x_ndim(self) -> int:
+        return 4 if self.deployed.family == "multi" else 3
+
+    def _example(self, bucket: int) -> np.ndarray:
+        n = self.deployed.cfg.input_size
+        shape = ((bucket, self.deployed.cfg.channels, n, n)
+                 if self.deployed.family == "multi" else (bucket, n, n))
+        return np.zeros(shape, np.float32)
+
+    def _dp(self, bucket: int) -> bool:
+        return (self._mesh is not None and bucket >= self.dp_min_bucket
+                and bucket % self.ndev == 0)
+
+    # --- compiled program per bucket ---
+    def _executable(self, xp: jax.Array):
+        from repro.core import propagation as pp
+
+        pin_key = (tuple(xp.shape), jnp.result_type(xp).name)
+        pinned = self._compiled.get(pin_key)
+        if pinned is not None:
+            return pinned
+        bucket = xp.shape[0]
+        dp = self._dp(bucket)
+        dep = self.deployed
+
+        def fwd(x, frozen):
+            return dep.forward(x, frozen=frozen)
+
+        if dp:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+
+            mesh = self._mesh
+            x_spec = P(*(("data",) + (None,) * (self._x_ndim() - 1)))
+            # frozen planes replicate; the batch axis shards.  Every device
+            # runs the full optical forward on its local rows — pure DP,
+            # zero cross-device collectives in the hot loop.
+            fa, fb = dep.frozen
+            rep = P(*((None,) * fa.ndim))
+            out_nd = 3 if dep.family == "seg" else 2
+            out_spec = P(*(("data",) + (None,) * (out_nd - 1)))
+
+            def run(x, frozen):
+                return shard_map(
+                    fwd, mesh=mesh, in_specs=(x_spec, (rep, rep)),
+                    out_specs=out_spec, check_vma=False,
+                )(x, frozen)
+
+            fn = run
+        else:
+            fn = fwd
+        key = dep.static_key() + ("dp", self.ndev if dp else 1, self.donate)
+        with warnings.catch_warnings():
+            # donation only pays when an output aval matches the request
+            # buffer (e.g. full-res segmentation maps); elsewhere it just
+            # releases the buffer early — silence XLA's per-compile nag
+            warnings.filterwarnings(
+                "ignore", message=".*donated buffers were not usable.*"
+            )
+            ex = pp.cached_executable(
+                key, fn, xp, dep.frozen,
+                donate_argnums=(0,) if self.donate else (),
+            )
+        self._compiled[pin_key] = ex
+        return ex
+
+    def _place(self, xp: np.ndarray) -> jax.Array:
+        if self._dp(xp.shape[0]):
+            return jax.device_put(xp, self._x_sharding)
+        return jnp.asarray(xp)
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> dict:
+        """AOT-compile (and cache) every bucket's executable now.
+
+        Deploy-time cost instead of first-request latency.  Returns
+        {bucket: compile_seconds}.
+        """
+        out = {}
+        for b in (self.buckets if buckets is None else buckets):
+            xp = self._place(self._example(b))
+            t0 = time.perf_counter()
+            self._executable(xp)
+            out[b] = time.perf_counter() - t0
+        return out
+
+    def infer(self, x) -> np.ndarray:
+        """Serve one request batch: pad to bucket, run, slice.
+
+        ``x``: (B, h, w) images ((B, C, h, w) for the RGB family), any B.
+        Batches wider than the largest bucket chunk through it.  Returns
+        the (B, ...) outputs as numpy (the host sync is the response).
+        """
+        x = np.asarray(x)
+        if x.ndim == self._x_ndim() - 1:
+            x = x[None]
+        b_max = self.buckets[-1]
+        outs = []
+        for lo in range(0, x.shape[0], b_max):
+            chunk = x[lo: lo + b_max]
+            bucket = bucket_for(chunk.shape[0], self.buckets)
+            xp = self._place(pad_batch(chunk, bucket))
+            ex = self._executable(xp)
+            out = ex(xp, self.deployed.frozen)
+            outs.append(np.asarray(out)[: chunk.shape[0]])
+            self.stats["batches"] += 1
+            self.stats["requests"] += int(chunk.shape[0])
+            self.stats["padded_rows"] += bucket - int(chunk.shape[0])
+        return np.concatenate(outs, axis=0)
+
+
+class MicroBatcher:
+    """Batch-full-or-deadline request dispatcher over an ``InferenceEngine``.
+
+    ``submit(x)`` enqueues one request (a single image / image stack) and
+    returns a ``concurrent.futures.Future``; a background worker drains
+    the queue whenever the largest bucket fills or the oldest queued
+    request has waited ``max_wait_ms``, pads the group to the nearest
+    bucket and serves it as one device call.
+    """
+
+    def __init__(self, engine: InferenceEngine, max_wait_ms: float = 2.0):
+        self.engine = engine
+        self.max_wait_s = max_wait_ms / 1e3
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: list = []  # (x, future, t_arrival)
+        self._closed = False
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def submit(self, x) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._pending.append((np.asarray(x), fut, time.perf_counter()))
+            self._cv.notify()
+        return fut
+
+    def _take(self) -> list:
+        """Block until a group is ready (full bucket or deadline hit)."""
+        b_max = self.engine.buckets[-1]
+        with self._cv:
+            while True:
+                if self._closed and not self._pending:
+                    return []
+                if self._pending:
+                    if len(self._pending) >= b_max or self._closed:
+                        break
+                    waited = time.perf_counter() - self._pending[0][2]
+                    if waited >= self.max_wait_s:
+                        break
+                    self._cv.wait(timeout=self.max_wait_s - waited)
+                else:
+                    self._cv.wait(timeout=0.1)
+            group = self._pending[:b_max]
+            del self._pending[:len(group)]
+            return group
+
+    def _run(self):
+        while True:
+            group = self._take()
+            if not group:
+                return
+            try:
+                # the stack is inside the try: a malformed request (e.g. a
+                # mismatched image shape) must fail its group's futures,
+                # not kill the worker and hang every later submit
+                xs = np.stack([g[0] for g in group])
+                outs = self.engine.infer(xs)
+                for (_, fut, _), out in zip(group, outs):
+                    fut.set_result(out)
+            except Exception as e:  # noqa: BLE001 - propagate to callers
+                for _, fut, _ in group:
+                    if not fut.done():
+                        fut.set_exception(e)
+
+    def close(self):
+        """Drain the queue and stop the worker."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._worker.join(timeout=30.0)

@@ -153,3 +153,40 @@ class TestGradients:
         assert bool(jnp.all(jnp.isfinite(grad))) and float(
             jnp.max(jnp.abs(grad))
         ) > 0
+
+
+class TestFresnelShiftPrefold:
+    """The cached Fresnel TF pre-folds the fftshift/ifftshift pair.
+
+    The textbook centered-plane hop spends two shifts per layer:
+    ``ifft2(ifftshift(H_c * fftshift(fft2(u))))``.  The TF cache stores
+    ``ifftshift(H_c)`` instead, so the runtime hop is shift-free — these
+    tests pin both the value fold and the hop parity.
+    """
+
+    def test_cached_plane_is_preshifted_centered_plane(self):
+        g = df.Grid(64, PX)
+        hc = df.fresnel_tf_centered(g, 0.05, WL)
+        h = df.transfer_function(g, 0.05, WL, df.FRESNEL, band_limit=False)
+        # the shift is a pure permutation: the fold is bit-exact
+        np.testing.assert_array_equal(np.fft.ifftshift(hc), h)
+
+    def test_fresnel_prefolded_shift_pair(self):
+        g = df.Grid(64, PX)
+        u = _rand_field(64, 11)
+        z = 0.05
+        hc = df.fresnel_tf_centered(g, z, WL)
+        # the unshifted (explicit shift-pair, centered-plane) reference hop
+        spec = np.fft.fftshift(np.fft.fft2(np.asarray(u)))
+        ref = np.fft.ifft2(np.fft.ifftshift(spec * hc))
+        got = np.asarray(
+            df.propagate(u, g, z, WL, df.FRESNEL, band_limit=False)
+        )
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+    def test_padded_plane_preshifted_too(self):
+        g = df.Grid(32, PX)
+        hc = df.fresnel_tf_centered(g, 0.02, WL, pad=True)
+        h = df.transfer_function(g, 0.02, WL, df.FRESNEL, band_limit=False,
+                                 pad=True)
+        np.testing.assert_array_equal(np.fft.ifftshift(hc), h)

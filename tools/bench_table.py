@@ -1,0 +1,101 @@
+"""Render the README perf-trajectory table from BENCH_summary.json.
+
+Reads the rolled-up benchmark summary (written by ``benchmarks/run.py``)
+and prints a GitHub-markdown table of the headline speedup per tier-1
+suite — the source of the table embedded in README.md.
+
+    PYTHONPATH=src:. python tools/bench_table.py [path/to/BENCH_summary.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+def _pick(meta: dict, *keys) -> dict:
+    """{cell: first present numeric key} over a suite's speedups meta."""
+    out = {}
+    for cell, v in meta.get("speedups", {}).items():
+        if not isinstance(v, dict):
+            if isinstance(v, (int, float)):
+                out[cell] = v
+            continue
+        for k in keys:
+            if isinstance(v.get(k), (int, float)):
+                out[cell] = v[k]
+                break
+    return out
+
+
+# suite -> (PR, headline metric extractor, description)
+HEADLINES = {
+    "propagation_plan": (
+        "1-2", lambda m: _fmt_map(_pick(m, "steady"), "x"),
+        "fused scan forward vs eager (steady state)"),
+    "dse_batched": (
+        "2", lambda m: _fmt_map(_pick(m, "speedup"), "x"),
+        "K-candidate batched emulation vs sequential build+jit+run (cold)"),
+    "hetero": (
+        "3", lambda m: _fmt_map(_pick(m, "cold", "steady"), "x"),
+        "ragged-depth batched DSE + segmented-plan forward"),
+    "train_throughput": (
+        "4", lambda m: _fmt_map(_pick(m, "steady", "speedup"), "x"),
+        "chunked donated training vs seed-style per-step loop"),
+    "inference_throughput": (
+        "5", lambda m: _fmt_map(_pick(m, "steady_b32"), "x"),
+        "frozen bucketed serving vs per-request apply (batch 32)"),
+}
+
+
+def _fmt_map(d: dict, suffix: str = "") -> str:
+    items = [(k, v) for k, v in d.items() if isinstance(v, (int, float))]
+    return ", ".join(f"{k} {v:g}{suffix}" for k, v in sorted(items))
+
+
+def render(summary_path: pathlib.Path) -> str:
+    summary = json.loads(summary_path.read_text())
+    lines = [
+        "| PR | suite | headline speedups | what it measures |",
+        "|----|-------|-------------------|------------------|",
+    ]
+    order = sorted(HEADLINES, key=lambda s: HEADLINES[s][0])
+    for suite in order:
+        pr, extract, desc = HEADLINES[suite]
+        cell = summary.get(suite)
+        if cell is None:
+            continue
+        head = extract(cell.get("meta", {})) or "—"
+        stale = " (stale)" if cell.get("stale") else ""
+        lines.append(f"| {pr} | `{suite}`{stale} | {head} | {desc} |")
+    return "\n".join(lines)
+
+
+START = "<!-- bench-table:start -->"
+END = "<!-- bench-table:end -->"
+
+
+def inject_readme(table: str, readme: pathlib.Path) -> None:
+    """Replace the marked block in README.md with the rendered table."""
+    text = readme.read_text()
+    if START not in text or END not in text:
+        raise SystemExit(f"no {START}/{END} markers in {readme}")
+    head, rest = text.split(START, 1)
+    _, tail = rest.split(END, 1)
+    readme.write_text(f"{head}{START}\n{table}\n{END}{tail}")
+    print(f"# updated {readme}")
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    path = pathlib.Path(args[0]) if args else REPO / "BENCH_summary.json"
+    table = render(path)
+    if "--write-readme" in sys.argv:
+        inject_readme(table, REPO / "README.md")
+    else:
+        print(table)
+
+
+if __name__ == "__main__":
+    main()
