@@ -68,7 +68,8 @@ def _bench_k(k: int, params, x, rows: list) -> dict:
     seq = []
     for cfg in cfgs:
         model = build_model(cfg)
-        fn = jax.jit(lambda p, xb: model.apply(p, xb))
+        # the measured baseline IS one fresh build+jit per candidate
+        fn = jax.jit(lambda p, xb: model.apply(p, xb))  # lightlint: disable=LR104
         seq.append(jax.block_until_ready(fn(params, x)))
     t_seq = time.perf_counter() - t0
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn, time_host_fn
-from repro.core import DONNConfig, build_model
+from repro.core import DONNConfig, build_model, cached_apply
 from repro.core.baselines import LightPipesLikeEngine
 from repro.core.diffraction import Grid
 
@@ -24,7 +24,10 @@ def main():
             r = np.random.default_rng(0)
             x = r.random((batch, 28, 28)).astype(np.float32)
             xj = jnp.asarray(x)
-            fwd = jax.jit(lambda p, v: model.apply(p, v))
+            # compile-once apply from the process-wide executable cache:
+            # re-running the sweep (or sharing a geometry across cells)
+            # never re-traces, unlike a fresh jax.jit per iteration
+            fwd = cached_apply(cfg)
             us_ours = time_fn(fwd, params, xj)
 
             eng = LightPipesLikeEngine(Grid(n, cfg.pixel_size), cfg.wavelength)

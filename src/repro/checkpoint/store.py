@@ -24,7 +24,7 @@ import os
 import pathlib
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

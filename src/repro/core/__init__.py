@@ -13,6 +13,12 @@ from repro.core.diffraction import (
 )
 from repro.core.laser import Laser, data_to_cplex
 from repro.core.layers import Detector, DiffractiveLayer
+from repro.core.physics import (
+    PhysicsValidationError,
+    PhysicsViolation,
+    PhysicsWarning,
+    validate_config,
+)
 from repro.core.models import (
     DONN,
     MultiChannelDONN,
@@ -42,4 +48,6 @@ __all__ = [
     "cached_apply", "cached_model", "clear_emulation_caches", "emulate_batch",
     "PropagationPlan", "plan_from_config", "plan_cache_stats",
     "clear_plan_cache", "tf_cache_stats", "clear_tf_cache",
+    "PhysicsValidationError", "PhysicsViolation", "PhysicsWarning",
+    "validate_config",
 ]

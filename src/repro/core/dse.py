@@ -15,8 +15,6 @@ analytical model to rank distributed-layout candidates for the LM stack
 from __future__ import annotations
 
 import dataclasses
-import itertools
-import math
 from typing import Callable, Optional, Sequence
 
 import numpy as np

@@ -35,10 +35,10 @@ Mixed-precision, mixed-size stack (SLM front end, printed-mask back end):
 """
 from __future__ import annotations
 
-import dataclasses
 from types import SimpleNamespace
 from typing import Optional, Sequence
 
+from repro.core import physics
 from repro.core.config import DONNConfig, LayerSpec
 from repro.core.laser import Laser
 from repro.core.models import build_model
@@ -94,20 +94,34 @@ _GLOBAL_KEYS = ("pad", "band_limit")
 
 
 def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
-                laser: Optional[Laser] = None, name: str = "donn-dsl",
-                gamma: Optional[float] = None, use_pallas: bool = False,
-                segmentation: bool = False, skip_from: Optional[int] = None,
-                channels: int = 1, input_size: int = 28,
-                engine: str = "scan", scan_unroll: Optional[int] = None,
-                tf_dtype: str = "float32", remat: str = "none",
-                layer_norm: Optional[bool] = None,
-                n: Optional[int] = None,
-                pixel_size: Optional[float] = None):
+                laser: Optional[Laser] = None, **opts):
     """Assemble layer + detector specs into (model, DONNConfig).
 
-    ``n`` / ``pixel_size`` set the detector/system grid explicitly;
-    they default to the first layer's plane (the uniform convention).
+    ``n`` / ``pixel_size`` in ``opts`` set the detector/system grid
+    explicitly; they default to the first layer's plane (the uniform
+    convention).  See ``_sequential_config`` for the full option list.
     """
+    cfg = _sequential_config(layer_specs, detector_spec, laser=laser, **opts)
+    # fail physically invalid specs with a domain error naming the
+    # criterion, not a shape/aliasing symptom deep in diffraction.py
+    physics.check_config(cfg)
+    return build_model(cfg, laser), cfg
+
+
+def _sequential_config(layer_specs: Sequence[dict], detector_spec: dict,
+                       laser: Optional[Laser] = None, name: str = "donn-dsl",
+                       gamma: Optional[float] = None, use_pallas: bool = False,
+                       segmentation: bool = False,
+                       skip_from: Optional[int] = None,
+                       channels: int = 1, input_size: int = 28,
+                       engine: str = "scan", scan_unroll: Optional[int] = None,
+                       tf_dtype: str = "float32", remat: str = "none",
+                       layer_norm: Optional[bool] = None,
+                       n: Optional[int] = None,
+                       pixel_size: Optional[float] = None) -> DONNConfig:
+    """Config-assembly half of ``sequential`` — no model build, no
+    validation; shared by the DSL, ``from_spec`` and the lint-time spec
+    validator (``spec_to_config``)."""
     if not layer_specs:
         raise ValueError("need at least one diffractive layer")
     first = layer_specs[0]
@@ -184,7 +198,7 @@ def _sequential(layer_specs: Sequence[dict], detector_spec: dict,
             response_gamma=first["response_gamma"],
             **common,
         )
-    return build_model(cfg, laser), cfg
+    return cfg
 
 
 _SEQUENTIAL_OPTS = (
@@ -194,8 +208,10 @@ _SEQUENTIAL_OPTS = (
 )
 
 
-def from_spec(spec: dict):
-    """Build a model from a JSON-able spec dict: {laser, layers, detector,...}."""
+def spec_to_config(spec: dict) -> DONNConfig:
+    """Assemble the ``DONNConfig`` a JSON spec describes — no model build,
+    no physics validation (the lint-time / artifact-audit entry point;
+    run ``repro.core.physics.validate_config`` on the result)."""
     src = laser(**spec.get("laser", {}))
     layer_specs = [
         _diffractlayer(**{k: v for k, v in s.items() if k != "kind"})
@@ -203,7 +219,19 @@ def from_spec(spec: dict):
     ]
     det = _detector(**{k: v for k, v in spec["detector"].items() if k != "kind"})
     opts = {k: spec[k] for k in _SEQUENTIAL_OPTS if k in spec}
-    return _sequential(layer_specs, det, laser=src, **opts)
+    return _sequential_config(layer_specs, det, laser=src, **opts)
+
+
+def from_spec(spec: dict):
+    """Build a model from a JSON-able spec dict: {laser, layers, detector,...}.
+
+    Physically invalid specs raise ``PhysicsValidationError`` naming the
+    violated criterion before any layer is built.
+    """
+    src = laser(**spec.get("laser", {}))
+    cfg = spec_to_config(spec)
+    physics.check_config(cfg)
+    return build_model(cfg, src), cfg
 
 
 def to_spec(cfg: DONNConfig, laser_: Optional[Laser] = None) -> dict:
@@ -259,6 +287,9 @@ def to_spec(cfg: DONNConfig, laser_: Optional[Laser] = None) -> dict:
         "remat": cfg.remat,
         "layer_norm": cfg.layer_norm,
     }
+    # exported artifacts must be loadable: run the same validator
+    # ``from_spec`` applies, so invalid specs fail at export time too
+    physics.check_config(cfg)
     return spec
 
 

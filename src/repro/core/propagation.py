@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import codesign as cd
 from repro.core import diffraction as df
+from repro.core import physics
 from repro.core.cache import lru_get, lru_put
 
 # --------------------------------------------------------------------------
@@ -823,6 +824,10 @@ def plan_from_config(cfg, gamma: float):
     plan = _cache_get(_PLAN_CACHE, key, _PLAN_STATS)
     if plan is not None:
         return plan
+    # validate once per plan-cache miss: physically invalid geometry
+    # raises a structured PhysicsValidationError naming the criterion
+    # before any TF plane is built (soft regime violations warn)
+    physics.check_config(cfg)
     cfg = cfg.canonical()
     if cfg.layers is not None:
         plan = SegmentedPlan(cfg, gamma)

@@ -1,7 +1,6 @@
 """Pure-jnp oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -3,14 +3,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax import: jax locks the device count on first init.
 
 import argparse
-import dataclasses
 import json
 import math
 import pathlib
 import sys
 import time
 
-import jax
 import jax.numpy as jnp
 
 from repro.compat import compiled_cost_analysis
@@ -23,7 +21,6 @@ from repro.models.config import get_config
 from repro.nn import param_count
 from repro.runtime import sharding as shd
 from repro.runtime import steps as steps_mod
-from repro.runtime.donn_steps import compile_donn_train_step
 from repro.runtime.hlo_analysis import analyze
 
 HBM_PER_CHIP = 16e9  # TPU v5e

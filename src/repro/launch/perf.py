@@ -22,14 +22,11 @@ import math
 import pathlib
 import time
 
-import jax
 import jax.numpy as jnp
 
 from repro.launch import mesh as mesh_mod
 from repro.launch.dryrun import OVERRIDES, donn_model_flops, lm_model_flops
 from repro.launch.specs import input_specs
-from repro.models import lm
-from repro.models.config import get_config
 from repro.runtime import sharding as shd
 from repro.runtime import steps as steps_mod
 from repro.runtime.donn_steps import (

@@ -6,7 +6,6 @@ EnCodec token ids (which are just int tokens — the backbone is token-in).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

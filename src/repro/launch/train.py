@@ -20,7 +20,6 @@ import argparse
 import json
 import signal
 import sys
-import time
 
 import jax
 import jax.numpy as jnp

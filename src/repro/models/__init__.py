@@ -1,3 +1,12 @@
+"""Seed LM model family (attention/MoE/SSM/RG-LRU stacks).
+
+Not on the DONN reproduction path, and kept deliberately: the family is
+exercised by tests/test_lm_models.py, test_lm_decode.py and the launch
+dryrun/perf tools, and ROADMAP item 4b (hybrid DONN + electronic head,
+arXiv 2411.05748) plans to reuse this NN code as the trained electronic
+stage behind the detector. lightlint runs over these modules like any
+other source — they are live fixtures, not quarantined code.
+"""
 from repro.models.config import LMConfig, LM_SHAPES, ShapeCell, get_config, list_archs
 from repro.models import lm
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable
 
 import jax.numpy as jnp
 

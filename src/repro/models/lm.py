@@ -12,7 +12,6 @@ materialized at (B, S, V); each chunk is recomputed in the backward pass.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax

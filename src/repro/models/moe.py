@@ -13,7 +13,6 @@ Returns an auxiliary load-balancing loss (Switch-style) alongside outputs.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

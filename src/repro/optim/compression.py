@@ -12,7 +12,6 @@ f32 ring all-reduce) and reduce locally.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

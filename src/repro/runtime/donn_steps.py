@@ -152,7 +152,6 @@ def compile_donn_train_step_shardmap(cfg: DONNConfig, mesh, optimizer=None,
     (local FFTs), and only the (tiny, phase-sized) gradients are psum'd —
     the textbook DP layout for a small-parameter model.
     """
-    from functools import partial
 
     from jax.sharding import PartitionSpec as P
 

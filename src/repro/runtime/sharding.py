@@ -14,7 +14,6 @@ Default layout (DESIGN.md §8):
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Mapping, Optional, Sequence
 
 import jax

@@ -7,13 +7,11 @@ maps batch across pods).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.models import lm
 from repro.models.config import LMConfig

@@ -1,0 +1,10 @@
+"""LR101 bad fixture: manual key enumeration missing fields."""
+
+
+def config_static_key(cfg):
+    # misses `remat` (and LayerSpec.pixel_size in plan_cache_key below)
+    return (cfg.n, cfg.pixel_size, cfg.wavelength, cfg.distance)
+
+
+def model_cache_key(model):
+    return config_static_key(model.cfg)

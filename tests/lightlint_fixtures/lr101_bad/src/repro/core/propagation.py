@@ -1,0 +1,7 @@
+"""LR101 bad fixture: per-layer tuple missing LayerSpec.pixel_size."""
+
+
+def plan_cache_key(cfg, gamma):
+    per_layer = tuple((l.size, l.distance) for l in cfg.layers)
+    return (per_layer, cfg.n, cfg.pixel_size, cfg.wavelength, cfg.distance,
+            float(gamma))

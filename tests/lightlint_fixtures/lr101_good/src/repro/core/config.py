@@ -1,0 +1,19 @@
+"""LR101 good fixture: same dataclasses as the bad tree."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    distance: float = 0.3
+    size: int = 64
+    pixel_size: float = 36e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class DONNConfig:
+    name: str = "donn"
+    n: int = 200
+    pixel_size: float = 36e-6
+    wavelength: float = 532e-9
+    distance: float = 0.30
+    remat: str = "none"

@@ -1,0 +1,12 @@
+"""LR101 good fixture: asdict consumes every field (the live idiom)."""
+import dataclasses
+
+
+def config_static_key(cfg):
+    d = dataclasses.asdict(cfg)
+    d.pop("name")
+    return tuple(sorted(d.items()))
+
+
+def model_cache_key(model):
+    return config_static_key(model.cfg)

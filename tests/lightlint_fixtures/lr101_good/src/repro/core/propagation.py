@@ -1,0 +1,9 @@
+"""LR101 good fixture: per-layer tuple reads every LayerSpec field."""
+
+
+def plan_cache_key(cfg, gamma):
+    per_layer = tuple(
+        (l.size, l.pixel_size, l.distance) for l in cfg.layers
+    )
+    return (per_layer, cfg.n, cfg.pixel_size, cfg.wavelength, cfg.distance,
+            cfg.remat, float(gamma))

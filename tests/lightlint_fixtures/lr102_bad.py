@@ -1,0 +1,13 @@
+"""LR102 bad fixture: donated buffer read after donation."""
+import jax.numpy as jnp
+
+from repro.core import propagation as pp
+
+
+def train(params, opt_state, xb, yb, step_impl, skey):
+    ex = pp.cached_executable(skey, step_impl, params, opt_state, xb, yb,
+                              donate_argnums=(0, 1))
+    new_params, new_opt = ex(params, opt_state, xb, yb)
+    # BUG: `params` was donated above — its buffer is gone
+    drift = jnp.sum(new_params - params)
+    return new_params, new_opt, drift

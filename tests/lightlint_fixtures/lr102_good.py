@@ -1,0 +1,16 @@
+"""LR102 good fixture: the live idiom — copy once, then rebind."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import propagation as pp
+
+
+def train(params, opt_state, chunks, step_impl, skey):
+    # donated state: copy so the caller's reference stays valid
+    params = jax.tree.map(jnp.array, params)
+    opt_state = jax.tree.map(jnp.array, opt_state)
+    for xb, yb in chunks:
+        ex = pp.cached_executable(skey, step_impl, params, opt_state, xb,
+                                  yb, donate_argnums=(0, 1))
+        params, opt_state = ex(params, opt_state, xb, yb)
+    return params, opt_state

@@ -1,0 +1,19 @@
+"""LR103 bad fixture: host syncs inside a scan body and a jitted fn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def chunk(params, xs):
+    def body(carry, xb):
+        loss = jnp.mean(carry * xb)
+        print("loss", loss)  # BUG: host sync inside the scan body
+        return carry + float(loss), loss  # BUG: float() on a tracer
+
+    return jax.lax.scan(body, params, xs)
+
+
+@jax.jit
+def evaluate(params, xb):
+    logits = params @ xb
+    return np.asarray(logits).sum()  # BUG: device->host inside jit

@@ -1,0 +1,10 @@
+"""LR104 bad fixture: fresh jit per loop iteration."""
+import jax
+
+
+def sweep(models, params, x):
+    outs = []
+    for model in models:
+        fn = jax.jit(lambda p, xb: model.apply(p, xb))  # BUG: re-jits
+        outs.append(fn(params, x))
+    return outs

@@ -1,0 +1,17 @@
+"""LR104 good fixture: hoisted jit / executable-cache routing."""
+import jax
+
+from repro.core import propagation as pp
+
+
+def sweep(apply_fn, params, xs):
+    fn = jax.jit(apply_fn)  # traced once, reused across the loop
+    return [fn(params, x) for x in xs]
+
+
+def sweep_cached(skey, apply_fn, params, xs):
+    outs = []
+    for x in xs:
+        ex = pp.cached_executable(skey, apply_fn, params, x)
+        outs.append(ex(params, x))
+    return outs

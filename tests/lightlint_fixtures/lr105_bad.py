@@ -1,0 +1,20 @@
+"""LR105 bad fixture: the pre-PR-2 donn_steps bug shape.
+
+A loss closure that rebuilds the model and captures a fresh jnp array:
+every outer call creates a new closure identity, so jit retraces.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_model
+
+
+def make_loss(cfg, labels):
+    onehot = jnp.asarray(labels)
+
+    def loss_fn(params, xb):
+        model = build_model(cfg)  # BUG: rebuilt per trace
+        logits = model.apply(params, xb)
+        return jnp.mean((logits - onehot) ** 2)  # BUG: captured array
+
+    return jax.jit(loss_fn)

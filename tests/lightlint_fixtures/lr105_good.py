@@ -1,0 +1,20 @@
+"""LR105 good fixture: the post-PR-2 idiom — cached model, array args."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import cached_model
+
+
+def make_loss(cfg):
+    model = cached_model(cfg)  # hoisted out of the loss closure
+
+    def loss_fn(params, xb, onehot):
+        logits = model.apply(params, xb)
+        return jnp.mean((logits - onehot) ** 2)
+
+    return jax.jit(loss_fn)
+
+
+def run(cfg, params, xb, labels):
+    loss = make_loss(cfg)
+    return loss(params, xb, jnp.asarray(labels))

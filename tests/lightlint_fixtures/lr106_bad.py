@@ -1,0 +1,14 @@
+"""LR106 bad fixture: bf16 planes combined/reduced without f32."""
+import jax.numpy as jnp
+
+
+def spectral_mul(tf_plane, field):
+    tfr = tf_plane.astype(jnp.bfloat16)
+    fr = field.astype(jnp.bfloat16)
+    prod = tfr * fr  # BUG: bf16 x bf16 accumulates in bf16
+    return jnp.sum(prod)
+
+
+def energy(plane):
+    p = plane.astype(jnp.bfloat16)
+    return jnp.sum(p)  # BUG: bf16 reduction without dtype=f32

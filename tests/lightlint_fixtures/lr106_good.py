@@ -1,0 +1,13 @@
+"""LR106 good fixture: the live _spectral_mul idiom — upcast then math."""
+import jax.numpy as jnp
+
+
+def spectral_mul(tf_plane, field):
+    tfr = tf_plane.astype(jnp.bfloat16)  # bf16 is the *storage* dtype
+    prod = tfr.astype(jnp.float32) * field  # accumulate in f32
+    return jnp.sum(prod)
+
+
+def energy(plane):
+    p = plane.astype(jnp.bfloat16)
+    return jnp.sum(p, dtype=jnp.float32)

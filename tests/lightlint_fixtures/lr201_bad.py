@@ -1,0 +1,17 @@
+"""LR201 bad fixture: physically invalid literal DONNConfig sites."""
+from repro.core import DONNConfig, LayerSpec
+
+# unmasked angular spectrum far past the sampling limit (z_crit ~ 0.156 m)
+ALIASED = DONNConfig(name="aliased", n=64, pixel_size=36e-6, distance=1.0,
+                     band_limit=False)
+
+# a 3x coarser stitch between adjacent planes
+UNDERSAMPLED = DONNConfig(
+    name="stitch", n=64, depth=2, distance=0.05,
+    layers=(LayerSpec(distance=0.05, size=64, pixel_size=12e-6),
+            LayerSpec(distance=0.05, size=64, pixel_size=36e-6)),
+)
+
+# quantized codesign with a single phase level
+ONE_LEVEL = DONNConfig(name="flat", n=64, distance=0.05, codesign="qat",
+                       device_levels=1)

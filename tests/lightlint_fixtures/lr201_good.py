@@ -1,0 +1,11 @@
+"""LR201 good fixture: the paper's MNIST geometry (valid everywhere)."""
+from repro.core import DONNConfig, LayerSpec
+
+MNIST3 = DONNConfig(name="donn-mnist-3l", n=200, pixel_size=36e-6,
+                    wavelength=532e-9, distance=0.28, depth=3)
+
+HETERO = DONNConfig(
+    name="hetero", n=48, pixel_size=48e-6, depth=2, distance=0.05,
+    layers=(LayerSpec(distance=0.05, size=64, pixel_size=36e-6),
+            LayerSpec(distance=0.05, size=48, pixel_size=48e-6)),
+)

@@ -1,5 +1,4 @@
 """Checkpoint store: roundtrip, atomic commit, GC, async, integrity."""
-import json
 import pathlib
 
 import jax

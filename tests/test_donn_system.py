@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.core.dsl as lr
 from repro.core import DONNConfig, build_model
@@ -12,9 +11,7 @@ from repro.core import codesign as cd
 from repro.core.baselines import LightPipesLikeEngine
 from repro.core.diffraction import Grid
 from repro.core.regularization import calibrate_gamma
-from repro.core.train_utils import (
-    evaluate_classifier, iou, train_classifier,
-)
+from repro.core.train_utils import evaluate_classifier, train_classifier
 from repro.data import batch_iterator, synth_digits, synth_rgb_scenes, synth_seg
 
 TINY = dict(n=64, depth=2, distance=0.05, det_size=8)

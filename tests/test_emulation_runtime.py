@@ -15,10 +15,8 @@ from repro.core import (
     clear_plan_cache,
     emulate_batch,
     plan_cache_stats,
-    plan_from_config,
 )
 from repro.core import models as mmod
-from repro.core import propagation as pp
 from repro.data import synth_digits, synth_rgb_scenes, synth_seg
 
 BASE = dict(n=48, depth=3, det_size=6)

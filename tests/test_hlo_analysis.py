@@ -6,8 +6,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from conftest import run_subprocess
 from repro.compat import compiled_cost_analysis

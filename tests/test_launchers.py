@@ -2,17 +2,14 @@
 preemption (SIGTERM) recovery, batched serving."""
 import json
 import os
-import pathlib
 import signal
 import subprocess
 import sys
-import textwrap
 import time
 
 import numpy as np
-import pytest
 
-from conftest import REPO, SRC
+from conftest import SRC
 
 
 def _run_train(args, timeout=560):

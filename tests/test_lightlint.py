@@ -1,0 +1,195 @@
+"""lightlint rule coverage: every rule fires on its bad fixture and stays
+silent on the corresponding good idiom, plus a meta-test that the live
+tree is clean (the same invocation CI runs)."""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO / "tools") not in sys.path:
+    sys.path.insert(0, str(REPO / "tools"))
+
+from lightlint import lint_paths  # noqa: E402
+from lightlint.core import Finding, parse_suppressions  # noqa: E402
+
+FIXTURES = REPO / "tests" / "lightlint_fixtures"
+
+
+def lint_fixture(name):
+    path = FIXTURES / name
+    return lint_paths([str(path)], root=str(FIXTURES))
+
+
+def rule_ids(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------- LR101
+class TestCacheKeyCompleteness:
+    def lint_tree(self, sub):
+        root = FIXTURES / sub
+        return lint_paths([str(root)], root=str(root))
+
+    def test_fires_on_stale_key_tree(self):
+        findings = self.lint_tree("lr101_bad")
+        assert rule_ids(findings) == {"LR101"}
+        messages = " ".join(f.message for f in findings)
+        # the two seeded gaps: DONNConfig.remat missing from every key fn,
+        # LayerSpec.pixel_size missing from plan_cache_key's per-layer tuple
+        assert "remat" in messages
+        assert "pixel_size" in messages
+        # findings anchor at the dataclass field definitions
+        assert all(f.path.endswith("config.py") for f in findings)
+
+    def test_silent_on_asdict_idiom(self):
+        assert self.lint_tree("lr101_good") == []
+
+
+# ---------------------------------------------------------------- LR102
+class TestDonationAliasing:
+    def test_fires_on_read_after_donate(self):
+        findings = lint_fixture("lr102_bad.py")
+        assert rule_ids(findings) == {"LR102"}
+        (f,) = findings
+        assert "params" in f.message and "donated" in f.message
+
+    def test_silent_on_rebind_idiom(self):
+        assert lint_fixture("lr102_good.py") == []
+
+
+# ---------------------------------------------------------------- LR103
+class TestHostSyncInHotPath:
+    def test_fires_on_sync_in_scan_and_jit(self):
+        findings = lint_fixture("lr103_bad.py")
+        assert rule_ids(findings) == {"LR103"}
+        messages = [f.message for f in findings]
+        assert any("print" in m for m in messages)
+        assert any("float()" in m for m in messages)
+        assert any("np.asarray" in m for m in messages)
+
+    def test_silent_on_device_accumulation(self):
+        assert lint_fixture("lr103_good.py") == []
+
+
+# ---------------------------------------------------------------- LR104
+class TestJitInLoop:
+    def test_fires_on_jit_in_loop(self):
+        findings = lint_fixture("lr104_bad.py")
+        assert rule_ids(findings) == {"LR104"}
+
+    def test_silent_on_hoisted_and_cached(self):
+        assert lint_fixture("lr104_good.py") == []
+
+
+# ---------------------------------------------------------------- LR105
+class TestClosureRetraceHazard:
+    def test_fires_on_build_in_closure_and_captured_array(self):
+        findings = lint_fixture("lr105_bad.py")
+        assert rule_ids(findings) == {"LR105"}
+        messages = " ".join(f.message for f in findings)
+        assert "build_model" in messages
+        assert "onehot" in messages
+
+    def test_silent_on_cached_model_idiom(self):
+        assert lint_fixture("lr105_good.py") == []
+
+
+# ---------------------------------------------------------------- LR106
+class TestBf16Accumulation:
+    def test_fires_on_bf16_product_and_reduction(self):
+        findings = lint_fixture("lr106_bad.py")
+        assert rule_ids(findings) == {"LR106"}
+        messages = " ".join(f.message for f in findings)
+        assert "astype(jnp.float32)" in messages
+        assert "dtype=jnp.float32" in messages
+
+    def test_silent_on_upcast_idiom(self):
+        assert lint_fixture("lr106_good.py") == []
+
+
+# ---------------------------------------------------------------- LR201
+class TestPhysicsConfigValidity:
+    def test_fires_on_invalid_literal_configs(self):
+        findings = lint_fixture("lr201_bad.py")
+        assert rule_ids(findings) == {"LR201"}
+        criteria = " ".join(f.message for f in findings)
+        assert "sampling-aliasing" in criteria
+        assert "stitch-undersample" in criteria
+        assert "device-levels" in criteria
+
+    def test_silent_on_paper_geometry(self):
+        assert lint_fixture("lr201_good.py") == []
+
+
+# ---------------------------------------------------------------- LR202
+class TestSpecArtifactValidity:
+    def test_fires_on_aliased_spec_artifact(self):
+        findings = lint_fixture("lr202_bad_spec.json")
+        assert rule_ids(findings) == {"LR202"}
+        assert any("sampling-aliasing" in f.message for f in findings)
+
+    def test_silent_on_valid_spec_artifact(self):
+        assert lint_fixture("lr202_good_spec.json") == []
+
+
+# ---------------------------------------------------------- suppressions
+class TestSuppressions:
+    def test_line_suppression_silences_rule(self, tmp_path):
+        src = (FIXTURES / "lr104_bad.py").read_text()
+        src = src.replace(
+            "fn = jax.jit(lambda p, xb: model.apply(p, xb))  # BUG: re-jits",
+            "fn = jax.jit(lambda p, xb: model.apply(p, xb))"
+            "  # lightlint: disable=LR104 -- fixture",
+        )
+        p = tmp_path / "suppressed.py"
+        p.write_text(src)
+        assert lint_paths([str(p)], root=str(tmp_path)) == []
+
+    def test_file_suppression_silences_rule(self, tmp_path):
+        src = ("# lightlint: disable-file=LR104\n"
+               + (FIXTURES / "lr104_bad.py").read_text())
+        p = tmp_path / "suppressed.py"
+        p.write_text(src)
+        assert lint_paths([str(p)], root=str(tmp_path)) == []
+
+    def test_parse_suppressions(self):
+        per_line, per_file = parse_suppressions(
+            "x = 1  # lightlint: disable=LR104,LR105 -- why\n"
+            "# lightlint: disable-file=LR201\n"
+        )
+        assert per_line == {1: {"LR104", "LR105"}}
+        assert per_file == {"LR201"}
+
+    def test_unsuppressed_rule_still_fires(self, tmp_path):
+        src = ("# lightlint: disable-file=LR103\n"
+               + (FIXTURES / "lr104_bad.py").read_text())
+        p = tmp_path / "partial.py"
+        p.write_text(src)
+        findings = lint_paths([str(p)], root=str(tmp_path))
+        assert rule_ids(findings) == {"LR104"}
+
+
+# ------------------------------------------------------------ framework
+class TestFramework:
+    def test_syntax_error_reported_not_raised(self, tmp_path):
+        p = tmp_path / "broken.py"
+        p.write_text("def f(:\n")
+        findings = lint_paths([str(p)], root=str(tmp_path))
+        assert rule_ids(findings) == {"LR000"}
+
+    def test_finding_format_and_dict(self):
+        f = Finding(path="a/b.py", line=3, rule="LR104",
+                    severity="error", message="msg")
+        assert f.format() == "a/b.py:3: LR104 [error] msg"
+        assert f.to_dict()["rule"] == "LR104"
+
+
+# ------------------------------------------------------------- meta-test
+def test_live_tree_is_clean(repo_root):
+    """The exact surface CI lints must stay clean (exit 0)."""
+    paths = [str(repo_root / d) for d in ("src", "tools", "benchmarks")
+             if (repo_root / d).exists()]
+    examples = repo_root / "examples"
+    if examples.exists():
+        paths.append(str(examples))
+    findings = lint_paths(paths, root=str(repo_root))
+    assert findings == [], "\n".join(f.format() for f in findings)

@@ -9,7 +9,6 @@ import pytest
 from repro.configs import LM_ARCHS
 from repro.models import get_config, lm
 from repro.models.attention import chunked_attention
-from repro.models.config import LMConfig
 from repro.models.moe import apply_moe, moe_spec
 from repro.models.rglru import apply_rglru_block, rglru_spec
 from repro.models.ssm import apply_mamba, mamba_spec

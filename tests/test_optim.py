@@ -2,11 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.optim import AdamW, SGD, constant, global_norm, warmup_cosine
-from repro.optim.adamw import AdamWState, clip_by_global_norm
+from repro.optim import AdamW, constant, global_norm, warmup_cosine
+from repro.optim.adamw import clip_by_global_norm
 from repro.optim.compression import (
     compression_ratio, dequantize_int8, ef_quantize, quantize_int8,
 )

@@ -1,0 +1,133 @@
+"""Physics spec validation: the shared validator rejects invalid DONN
+geometries on every entry path — statically (``validate_config``), at
+plan-build time (``plan_from_config``), and through the DSL JSON spec
+round-trip (``from_spec`` / ``to_spec``)."""
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+import repro.core.dsl as lr
+from repro.core import DONNConfig, LayerSpec, PhysicsValidationError
+from repro.models.config import get_config
+from repro.core.physics import (
+    PhysicsWarning,
+    band_limit_frequency,
+    critical_distance,
+    fresnel_number,
+    validate_config,
+)
+from repro.core.propagation import plan_from_config
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "lightlint_fixtures"
+
+
+def aliased_config(**overrides):
+    """Unmasked angular spectrum far past the sampling limit
+    (z_crit ~ 0.156 m for n=64, dx=36um, 532nm)."""
+    kw = dict(name="aliased", n=64, pixel_size=36e-6, distance=1.0,
+              band_limit=False)
+    kw.update(overrides)
+    return DONNConfig(**kw)
+
+
+class TestStaticPath:
+    def test_sampling_criterion_flagged(self):
+        violations = validate_config(aliased_config())
+        assert violations, "expected sampling-aliasing violations"
+        assert all(v.criterion == "sampling-aliasing" for v in violations)
+        assert all(v.severity == "error" for v in violations)
+
+    def test_violation_message_names_criterion_and_numbers(self):
+        v = validate_config(aliased_config())[0]
+        s = str(v)
+        assert "sampling-aliasing" in s
+        assert "z_crit" in s and "0.1559" in s
+
+    def test_stitch_undersample_flagged(self):
+        cfg = DONNConfig(
+            name="stitch", n=64, depth=2, distance=0.05,
+            layers=(LayerSpec(distance=0.05, size=64, pixel_size=12e-6),
+                    LayerSpec(distance=0.05, size=64, pixel_size=36e-6)),
+        )
+        crits = {v.criterion for v in validate_config(cfg)}
+        assert "stitch-undersample" in crits
+
+    def test_device_levels_flagged(self):
+        cfg = DONNConfig(name="flat", n=64, distance=0.05, codesign="qat",
+                         device_levels=1)
+        crits = {v.criterion for v in validate_config(cfg)}
+        assert crits == {"device-levels"}
+
+    def test_registered_archs_all_valid(self):
+        from repro.configs import DONN_ARCHS
+
+        for name in DONN_ARCHS:
+            for smoke in (False, True):
+                cfg = get_config(name, smoke=smoke)
+                assert validate_config(cfg) == [], name
+
+    def test_helper_formulas(self):
+        # z_crit = N_eff * dx^2 / lambda (pad doubles N_eff)
+        z = critical_distance(64, 36e-6, 532e-9, pad=False)
+        assert z == pytest.approx(64 * 36e-6**2 / 532e-9)
+        zp = critical_distance(64, 36e-6, 532e-9, pad=True)
+        assert zp == pytest.approx(2 * z)
+        # Fresnel number F = a^2 / (lambda z), a = n*dx/2
+        a = 64 * 36e-6 / 2
+        assert fresnel_number(64, 36e-6, 0.05, 532e-9) == pytest.approx(
+            a * a / (532e-9 * 0.05))
+        assert band_limit_frequency(64, 36e-6, 0.05, 532e-9, pad=False) > 0
+
+
+class TestPlanBuildPath:
+    def test_plan_from_config_raises_domain_error(self):
+        with pytest.raises(PhysicsValidationError) as exc:
+            plan_from_config(aliased_config(name="aliased-plan"), 1.0)
+        assert "sampling-aliasing" in str(exc.value)
+        assert exc.value.violations
+
+    def test_valid_config_builds_plan(self):
+        cfg = get_config("donn-mnist-3l", smoke=True)
+        assert plan_from_config(cfg, 1.0) is not None
+
+    def test_fraunhofer_near_field_warns(self):
+        cfg = dataclasses.replace(
+            get_config("donn-mnist-3l", smoke=True),
+            name="fraunhofer-near", approximation="fraunhofer",
+            band_limit=False,
+        )
+        with pytest.warns(PhysicsWarning, match="fraunhofer-far-field"):
+            plan_from_config(cfg, 1.0)
+
+
+class TestSpecPath:
+    def test_from_spec_rejects_invalid_artifact(self):
+        spec = json.loads((FIXTURES / "lr202_bad_spec.json").read_text())
+        with pytest.raises(PhysicsValidationError, match="sampling-aliasing"):
+            lr.from_spec(spec)
+
+    def test_from_spec_accepts_valid_artifact(self):
+        spec = json.loads((FIXTURES / "lr202_good_spec.json").read_text())
+        model, cfg = lr.from_spec(spec)
+        assert model is not None and cfg.depth == 2
+
+    def test_to_spec_rejects_invalid_config(self):
+        with pytest.raises(PhysicsValidationError, match="sampling-aliasing"):
+            lr.to_spec(aliased_config(name="aliased-export"))
+
+    def test_sequential_rejects_invalid_stack(self):
+        det = lr.layers.detector(num_classes=10, det_size=12, distance=1.0)
+        stack = [lr.layers.diffractlayer(distance=1.0, size=64,
+                                         pixel_size=36e-6, band_limit=False)]
+        with pytest.raises(PhysicsValidationError, match="sampling-aliasing"):
+            lr.models.sequential(stack, det)
+
+    def test_spec_to_config_skips_validation(self):
+        # the lint-time entry point assembles without raising so the
+        # linter can report violations as findings instead of crashing
+        spec = json.loads((FIXTURES / "lr202_bad_spec.json").read_text())
+        cfg = lr.spec_to_config(spec)
+        assert any(v.criterion == "sampling-aliasing"
+                   for v in validate_config(cfg))

@@ -10,9 +10,7 @@ from repro.core.diffraction import Grid
 from repro.launch.specs import cell_status, input_specs, shapes_for
 from repro.models.config import LM_SHAPES, get_config
 from repro.nn import ParamSpec, init_params, param_bytes, param_count
-from repro.runtime.sharding import (
-    DEFAULT_RULES, batch_sharding, resolve_pspec,
-)
+from repro.runtime.sharding import batch_sharding, resolve_pspec
 
 
 def _mesh(shape, axes):

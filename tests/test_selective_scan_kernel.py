@@ -1,5 +1,4 @@
 """Pallas selective-scan kernel vs the model's chunked-scan oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

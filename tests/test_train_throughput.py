@@ -20,7 +20,7 @@ from repro.core import propagation as pp
 from repro.core.train_utils import (
     make_train_chunk, make_train_step, optimizer_cache_key, train_classifier,
 )
-from repro.data import batch_iterator, synth_digits, synth_seg
+from repro.data import batch_iterator, synth_digits
 from repro.data.pipeline import device_prefetch, stack_batches
 from repro.optim import AdamW
 

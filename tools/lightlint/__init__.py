@@ -1,0 +1,30 @@
+"""lightlint — JAX-aware static analysis + physics spec validation.
+
+Repo-specific lint layer on top of ``ruff``: the generic style rules live
+in ``pyproject.toml`` / ruff; lightlint carries only the rules that need
+to understand this codebase (cache-key completeness, donation aliasing,
+host syncs in hot paths, recompile hazards, bf16 accumulation
+discipline) and the physics-validity criteria shared with build time
+(``repro.core.physics``).
+
+Run it:
+
+    python tools/lightlint/cli.py src tools benchmarks examples
+
+Suppress a finding:
+
+    fwd = jax.jit(f)  # lightlint: disable=LR104 -- measured baseline
+
+Add a rule: subclass ``lightlint.core.Rule``, implement
+``visit(tree, ctx)`` (per-file) or ``finalize(project)`` (whole-tree),
+register it in ``lightlint.rules.ALL_RULES`` and add a fixture pair
+under ``tests/lightlint_fixtures/``.
+"""
+from lightlint.core import (  # noqa: F401
+    Finding,
+    FileContext,
+    Project,
+    Rule,
+    lint_paths,
+)
+from lightlint.rules import ALL_RULES, default_rules  # noqa: F401

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""lightlint CLI.
+
+    python tools/lightlint/cli.py src tools benchmarks examples
+    python tools/lightlint/cli.py --format json src
+    python tools/lightlint/cli.py --select LR104,LR201 benchmarks
+
+Exit status: 0 when clean, 1 when any unsuppressed finding remains,
+2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[2]
+for _p in (_REPO / "tools", _REPO / "src"):
+    if _p.is_dir() and str(_p) not in sys.path:
+        sys.path.insert(0, str(_p))
+
+from lightlint import lint_paths, reporters  # noqa: E402
+from lightlint.rules import default_rules, rules_by_id  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lightlint",
+        description="JAX-aware static analysis + physics spec validation",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--format", choices=("human", "json"), default="human")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--root", default=None,
+                    help="project root for cross-file rules "
+                         "(default: current directory)")
+    args = ap.parse_args(argv)
+
+    rules = default_rules()
+    if args.select:
+        rules = rules_by_id(r.strip() for r in args.select.split(","))
+        if not rules:
+            ap.error(f"no rules match --select {args.select!r}")
+    missing = [p for p in args.paths if not pathlib.Path(p).exists()]
+    if missing:
+        ap.error(f"no such path: {', '.join(missing)}")
+
+    findings = lint_paths(args.paths, root=args.root, rules=rules)
+    if args.format == "json":
+        reporters.json_report(findings)
+    else:
+        reporters.human(findings)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

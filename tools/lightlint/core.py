@@ -1,0 +1,195 @@
+"""lightlint engine: findings, suppressions, rule protocol, runner."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+
+# trailing `# lightlint: disable=LR104` silences that line;
+# `# lightlint: disable-file=LR104` anywhere silences the whole file.
+# An optional ` -- rationale` tail documents why.
+_SUPPRESS_RE = re.compile(
+    r"#\s*lightlint:\s*disable(?P<file>-file)?\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_*]+(?:\s*,\s*[A-Za-z0-9_*]+)*)"
+)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a file location."""
+
+    path: str  # repo-relative where possible
+    line: int
+    rule: str  # e.g. "LR104"
+    severity: str  # "error" | "warning"
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.severity}] {self.message}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_suppressions(source: str) -> Tuple[Dict[int, Set[str]], Set[str]]:
+    """(line -> rule-ids, file-level rule-ids) from suppression comments."""
+    per_line: Dict[int, Set[str]] = {}
+    per_file: Set[str] = set()
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if m is None:
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+        if m.group("file"):
+            per_file |= rules
+        else:
+            per_line.setdefault(i, set()).update(rules)
+    return per_line, per_file
+
+
+class FileContext:
+    """One parsed source file handed to per-file rules."""
+
+    def __init__(self, path: os.PathLike, source: str,
+                 root: Optional[os.PathLike] = None):
+        self.path = str(path)
+        self.root = str(root) if root is not None else None
+        try:
+            rel = os.path.relpath(self.path, self.root or os.getcwd())
+        except ValueError:  # different drive (windows)
+            rel = self.path
+        self.rel = rel if not rel.startswith("..") else self.path
+        self.source = source
+        self.lines = source.splitlines()
+        self.line_suppressions, self.file_suppressions = parse_suppressions(
+            source
+        )
+
+    def finding(self, rule: "Rule", node_or_line, message: str,
+                severity: Optional[str] = None) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(self.rel, int(line), rule.rule_id,
+                       severity or rule.severity, message)
+
+    def suppressed(self, finding: Finding) -> bool:
+        ids = {finding.rule, "*"}
+        if ids & self.file_suppressions:
+            return True
+        return bool(ids & self.line_suppressions.get(finding.line, set()))
+
+
+class Project:
+    """Whole-tree view handed to project-scope rules after the file pass."""
+
+    def __init__(self, root: os.PathLike, contexts: Sequence[FileContext],
+                 json_files: Sequence[os.PathLike] = ()):
+        self.root = pathlib.Path(root)
+        self.contexts = list(contexts)
+        self.json_files = [pathlib.Path(p) for p in json_files]
+        self._by_rel = {c.rel.replace(os.sep, "/"): c for c in self.contexts}
+
+    def context_for(self, rel: str) -> Optional[FileContext]:
+        """Context for a repo-relative path ('src/repro/core/config.py')."""
+        return self._by_rel.get(rel)
+
+    def tree_for(self, rel: str) -> Optional[ast.AST]:
+        ctx = self.context_for(rel)
+        if ctx is None:
+            return None
+        try:
+            return ast.parse(ctx.source, filename=ctx.path)
+        except SyntaxError:
+            return None
+
+
+class Rule:
+    """Base rule: implement ``visit`` (per file), ``finalize`` (per tree).
+
+    ``visit(tree, ctx)`` receives the parsed ``ast`` module and the
+    :class:`FileContext`; return an iterable of findings (use
+    ``ctx.finding(self, node, msg)``).  ``finalize(project)`` runs once
+    after every file was visited — for rules that need to correlate
+    several files (e.g. LR101 cache-key completeness).
+    """
+
+    rule_id = "LR000"
+    title = ""
+    severity = ERROR
+
+    def visit(self, tree: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        return ()
+
+    def finalize(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache",
+              "node_modules", ".venv", "venv"}
+
+
+def discover(paths: Sequence[os.PathLike]):
+    """(.py files, .json files) under the given files/directories."""
+    py: List[pathlib.Path] = []
+    js: List[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_file():
+            (py if p.suffix == ".py" else js if p.suffix == ".json"
+             else []).append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS
+                                 and not d.startswith("."))
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    py.append(pathlib.Path(dirpath) / f)
+                elif f.endswith(".json"):
+                    js.append(pathlib.Path(dirpath) / f)
+    return py, js
+
+
+def lint_paths(paths: Sequence[os.PathLike],
+               root: Optional[os.PathLike] = None,
+               rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run every rule over the given paths; suppressed findings dropped."""
+    if rules is None:
+        from lightlint.rules import default_rules
+
+        rules = default_rules()
+    root = pathlib.Path(root) if root is not None else pathlib.Path.cwd()
+    py_files, json_files = discover(paths)
+    contexts: List[FileContext] = []
+    findings: List[Finding] = []
+    for f in py_files:
+        try:
+            source = f.read_text()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(str(f), 1, "LR000", ERROR,
+                                    f"unreadable source: {e}"))
+            continue
+        ctx = FileContext(f, source, root)
+        try:
+            tree = ast.parse(source, filename=str(f))
+        except SyntaxError as e:
+            findings.append(Finding(ctx.rel, e.lineno or 1, "LR000", ERROR,
+                                    f"syntax error: {e.msg}"))
+            continue
+        contexts.append(ctx)
+        for rule in rules:
+            for fd in rule.visit(tree, ctx):
+                if not ctx.suppressed(fd):
+                    findings.append(fd)
+    project = Project(root, contexts, json_files)
+    for rule in rules:
+        for fd in rule.finalize(project):
+            ctx = project.context_for(fd.path.replace(os.sep, "/"))
+            if ctx is None or not ctx.suppressed(fd):
+                findings.append(fd)
+    return sorted(findings)

@@ -1,0 +1,29 @@
+"""Finding reporters: human-readable lines and machine-readable JSON."""
+from __future__ import annotations
+
+import json
+import sys
+from collections import Counter
+from typing import Sequence
+
+from lightlint.core import Finding
+
+
+def human(findings: Sequence[Finding], stream=None) -> None:
+    stream = stream or sys.stdout
+    for f in findings:
+        stream.write(f.format() + "\n")
+    by_sev = Counter(f.severity for f in findings)
+    if findings:
+        parts = ", ".join(f"{n} {sev}{'s' if n != 1 else ''}"
+                          for sev, n in sorted(by_sev.items()))
+        stream.write(f"lightlint: {len(findings)} finding"
+                     f"{'s' if len(findings) != 1 else ''} ({parts})\n")
+    else:
+        stream.write("lightlint: clean\n")
+
+
+def json_report(findings: Sequence[Finding], stream=None) -> None:
+    stream = stream or sys.stdout
+    json.dump([f.to_dict() for f in findings], stream, indent=2)
+    stream.write("\n")

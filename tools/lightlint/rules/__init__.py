@@ -1,0 +1,34 @@
+"""Rule registry: every rule ships here + a fixture pair under
+``tests/lightlint_fixtures/``."""
+from lightlint.rules.jax_rules import (
+    Bf16Accumulation,
+    CacheKeyCompleteness,
+    ClosureRetraceHazard,
+    DonationAliasing,
+    HostSyncInHotPath,
+    JitInLoop,
+)
+from lightlint.rules.physics_rules import (
+    PhysicsConfigValidity,
+    SpecArtifactValidity,
+)
+
+ALL_RULES = (
+    CacheKeyCompleteness,  # LR101
+    DonationAliasing,  # LR102
+    HostSyncInHotPath,  # LR103
+    JitInLoop,  # LR104
+    ClosureRetraceHazard,  # LR105
+    Bf16Accumulation,  # LR106
+    PhysicsConfigValidity,  # LR201
+    SpecArtifactValidity,  # LR202
+)
+
+
+def default_rules():
+    return [cls() for cls in ALL_RULES]
+
+
+def rules_by_id(ids):
+    sel = set(ids)
+    return [cls() for cls in ALL_RULES if cls.rule_id in sel]

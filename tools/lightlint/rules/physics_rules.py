@@ -1,0 +1,159 @@
+"""Physics-validity rules (LR201-LR202).
+
+Both delegate to ``repro.core.physics.validate_config`` — the same
+validator ``plan_from_config`` and ``dsl.from_spec`` run at build time —
+so lint-time and runtime criteria cannot drift.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+from typing import Iterable, List
+
+from lightlint.core import ERROR, FileContext, Finding, Project, Rule
+
+
+def _import_repro():
+    """(config module, physics module) or None when repro is unavailable."""
+    try:
+        from repro.core import config as cfg_mod
+        from repro.core import physics
+    except Exception:
+        return None
+    return cfg_mod, physics
+
+
+class _Unevaluable(Exception):
+    pass
+
+
+def _literal(node, cfg_mod):
+    """Literal-evaluate a config kwarg (constants, tuples, LayerSpec)."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(_literal(e, cfg_mod) for e in node.elts)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _literal(node.operand, cfg_mod)
+        if isinstance(v, (int, float)):
+            return -v
+        raise _Unevaluable
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        # (LayerSpec(...),) * 3 and literal arithmetic
+        left = _literal(node.left, cfg_mod)
+        right = _literal(node.right, cfg_mod)
+        try:
+            return left * right
+        except TypeError:
+            raise _Unevaluable from None
+    if isinstance(node, ast.Call):
+        name = node.func
+        tail = (name.attr if isinstance(name, ast.Attribute)
+                else name.id if isinstance(name, ast.Name) else "")
+        if tail == "LayerSpec" and not node.args:
+            kwargs = {}
+            for kw in node.keywords:
+                if kw.arg is None:
+                    raise _Unevaluable
+                kwargs[kw.arg] = _literal(kw.value, cfg_mod)
+            return cfg_mod.LayerSpec(**kwargs)
+    raise _Unevaluable
+
+
+class PhysicsConfigValidity(Rule):
+    """LR201: statically validate literal ``DONNConfig(...)`` call sites.
+
+    Evaluates config constructors whose kwargs are literals (constants,
+    tuples, literal ``LayerSpec`` calls) and runs the shared physics
+    validator over the resulting value — the same criteria
+    ``plan_from_config`` enforces at build time, surfaced at lint time
+    for ``examples/``, ``src/repro/configs/donn.py`` and the benches.
+    Call sites with runtime-computed kwargs are skipped (the build-time
+    hook still covers them).
+    """
+
+    rule_id = "LR201"
+    title = "physics-config validity"
+    severity = ERROR
+
+    def visit(self, tree: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        calls = [
+            n for n in ast.walk(tree)
+            if isinstance(n, ast.Call) and (
+                (isinstance(n.func, ast.Name)
+                 and n.func.id == "DONNConfig")
+                or (isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "DONNConfig"))
+        ]
+        if not calls:
+            return []
+        mods = _import_repro()
+        if mods is None:
+            return []
+        cfg_mod, physics = mods
+        out: List[Finding] = []
+        for call in calls:
+            if call.args:
+                continue  # positional form: skip, cannot map reliably
+            kwargs = {}
+            try:
+                for kw in call.keywords:
+                    if kw.arg is None:
+                        raise _Unevaluable
+                    kwargs[kw.arg] = _literal(kw.value, cfg_mod)
+            except _Unevaluable:
+                continue
+            try:
+                cfg = cfg_mod.DONNConfig(**kwargs)
+            except Exception:
+                continue  # constructor errors are __post_init__'s job
+            for v in physics.validate_config(cfg):
+                out.append(ctx.finding(self, call, str(v),
+                                       severity=v.severity))
+        return out
+
+
+class SpecArtifactValidity(Rule):
+    """LR202: JSON ``to_spec`` artifacts must describe valid physics.
+
+    Any scanned ``*.json`` that looks like a DONN spec (has ``layers``
+    and ``detector`` keys) is assembled into a ``DONNConfig`` via
+    ``dsl.spec_to_config`` (no model build) and run through the shared
+    validator — an artifact that would fail ``from_spec`` at load time
+    fails lint now.
+    """
+
+    rule_id = "LR202"
+    title = "spec artifact validity"
+    severity = ERROR
+
+    def finalize(self, project: Project) -> Iterable[Finding]:
+        if not project.json_files:
+            return []
+        try:
+            from repro.core import dsl, physics
+        except Exception:
+            return []
+        out: List[Finding] = []
+        for path in project.json_files:
+            try:
+                data = json.loads(path.read_text())
+            except (OSError, ValueError):
+                continue  # not a readable JSON document: not our concern
+            if not (isinstance(data, dict) and "layers" in data
+                    and "detector" in data):
+                continue
+            try:
+                rel = os.path.relpath(path, project.root)
+            except ValueError:
+                rel = str(path)
+            try:
+                cfg = dsl.spec_to_config(data)
+            except Exception as e:
+                out.append(Finding(rel, 1, self.rule_id, ERROR,
+                                   f"unloadable DONN spec: {e}"))
+                continue
+            for v in physics.validate_config(cfg):
+                out.append(Finding(rel, 1, self.rule_id, v.severity, str(v)))
+        return out
