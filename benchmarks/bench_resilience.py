@@ -1,0 +1,207 @@
+"""Resilience under fault load: overload shedding, cold-start, noise curves.
+
+The serving stack claims to *survive* real traffic, not just to be fast
+(`repro.runtime.resilience`).  This suite measures the claims:
+
+- ``cold_start``: freeze-from-params vs ``save_deployed`` →
+  ``load_deployed`` → warmup — the crashed-replica recovery path.  The
+  loaded artifact's outputs are asserted bit-identical to the original
+  freeze before any number is reported.
+- ``overload``: an open-loop burst far beyond capacity into a
+  ``MicroBatcher`` with a bounded admission queue — p50/p99 latency of
+  *served* requests plus the shed rate (``OverloadedError``).  The
+  unbounded alternative would report great throughput and unbounded tail
+  latency; the shed rate is the honest number.
+- ``deadline``: same burst with per-request deadlines — expired fraction
+  vs served fraction at a tight ``timeout_ms``.
+- ``phase_noise/s<sigma>``: accuracy of a quick-trained classifier as
+  Gaussian phase noise is injected into the frozen modulation planes
+  (``repro.testing.perturb_frozen`` — SLM non-idealities, arXiv
+  2209.14252), plus dead-pixel and 1-px misalignment rows.  Sigma=0 is
+  asserted equal to the clean accuracy (exact baseline).
+
+Rows persist to ``artifacts/bench/BENCH_resilience.json``.
+
+    PYTHONPATH=src:. python benchmarks/bench_resilience.py
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, write_bench_json
+from repro.core import DONNConfig, build_model
+from repro.core.train_utils import train_classifier
+from repro.data import batch_iterator, synth_digits
+from repro.runtime.inference import InferenceEngine, MicroBatcher, freeze
+from repro.runtime.resilience import (
+    OverloadedError, load_deployed, save_deployed,
+)
+from repro.testing import perturb_frozen
+
+
+def _cfg() -> DONNConfig:
+    return DONNConfig(name="rz", n=32, depth=3, distance=0.05, det_size=6,
+                      codesign="qat")
+
+
+def _trained_model(steps: int = 60):
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    xs, ys = synth_digits(512, seed=0)
+    res = train_classifier(model, params, batch_iterator(xs, ys, 32, seed=1),
+                           steps=steps, lr=0.3, steps_per_call=10)
+    return model, res.params, xs, ys
+
+
+def _bench_cold_start(rows, model, params, tmpdir) -> dict:
+    x = np.random.default_rng(3).random((4, 28, 28), np.float32)
+    t0 = time.perf_counter()
+    dep = freeze(model, params)
+    jax.block_until_ready(dep.frozen)
+    t_freeze = time.perf_counter() - t0
+    ref = InferenceEngine(dep, buckets=(4,)).infer(x)
+
+    save_deployed(dep, tmpdir)
+    t0 = time.perf_counter()
+    dep2 = load_deployed(tmpdir)
+    eng = InferenceEngine(dep2, buckets=(4,))
+    eng.warmup()
+    t_load = time.perf_counter() - t0
+    got = eng.infer(x)
+    if not np.array_equal(ref, got):
+        raise AssertionError("artifact round-trip is not bit-identical")
+    row("resilience/cold_start", t_load * 1e6,
+        f"load+warm={t_load * 1e3:.0f}ms freeze={t_freeze * 1e3:.0f}ms "
+        "bit_identical=True")
+    rows.append({"name": "resilience/cold_start", "us": t_load * 1e6,
+                 "derived": f"freeze_ms={t_freeze * 1e3:.1f}"})
+    return {"load_warm_ms": round(t_load * 1e3, 1),
+            "freeze_ms": round(t_freeze * 1e3, 1)}
+
+
+def _burst(mb: MicroBatcher, reqs, timeout_ms=None):
+    """Open-loop burst: submit everything immediately; collect outcomes."""
+    futs, shed = [], 0
+    for x in reqs:
+        try:
+            futs.append((time.perf_counter(),
+                         mb.submit(x, timeout_ms=timeout_ms)))
+        except OverloadedError:
+            shed += 1
+    lat, expired = [], 0
+    for t0, f in futs:
+        try:
+            f.result(timeout=120)
+            lat.append(time.perf_counter() - t0)
+        except Exception:  # noqa: BLE001 - deadline expiries are expected
+            expired += 1
+    return np.asarray(lat), shed, expired
+
+
+def _percentiles(lat_s: np.ndarray) -> tuple:
+    lat_ms = np.sort(lat_s) * 1e3
+    p50 = lat_ms[len(lat_ms) // 2]
+    p99 = lat_ms[min(len(lat_ms) - 1, int(len(lat_ms) * 0.99))]
+    return float(p50), float(p99)
+
+
+def _bench_overload(rows, engine, n_reqs: int = 256,
+                    max_queue: int = 16) -> dict:
+    reqs = np.random.default_rng(5).random((n_reqs, 28, 28), np.float32)
+    mb = MicroBatcher(engine, max_wait_ms=1.0, max_queue=max_queue)
+    lat, shed, _ = _burst(mb, reqs)
+    clean = mb.close()
+    p50, p99 = _percentiles(lat)
+    shed_rate = shed / n_reqs
+    row("resilience/overload", p50 * 1e3,
+        f"p99={p99:.1f}ms shed_rate={shed_rate:.2f} served={len(lat)} "
+        f"clean_close={clean}")
+    rows.append({"name": "resilience/overload", "us": p50 * 1e3,
+                 "derived": f"p99_ms={p99:.1f},shed_rate={shed_rate:.3f}"})
+    if shed == 0:
+        raise AssertionError(
+            "overload burst was fully admitted — the bound did not bind"
+        )
+    return {"p50_ms": round(p50, 2), "p99_ms": round(p99, 2),
+            "shed_rate": round(shed_rate, 3), "served": len(lat)}
+
+
+def _bench_deadline(rows, engine, n_reqs: int = 64) -> dict:
+    reqs = np.random.default_rng(6).random((n_reqs, 28, 28), np.float32)
+    mb = MicroBatcher(engine, max_wait_ms=50.0, max_queue=None)
+    # deadline far below the batcher's own launch deadline: most requests
+    # must expire instead of waiting the full 50ms window
+    lat, _, expired = _burst(mb, reqs, timeout_ms=1.0)
+    mb.close()
+    served = len(lat)
+    row("resilience/deadline", (np.median(lat) * 1e6 if served else 0.0),
+        f"expired={expired}/{n_reqs} served={served}")
+    rows.append({"name": "resilience/deadline",
+                 "us": float(np.median(lat) * 1e6) if served else 0.0,
+                 "derived": f"expired={expired},served={served}"})
+    if expired == 0:
+        raise AssertionError("no request expired under a 1ms deadline")
+    return {"expired": expired, "served": served}
+
+
+def _acc(engine, xs, ys) -> float:
+    logits = engine.infer(xs)
+    return float(np.mean(np.argmax(logits, -1) == np.asarray(ys)))
+
+
+def _bench_phase_noise(rows, model, params, xs, ys) -> dict:
+    dep = freeze(model, params)
+    xb, yb = xs[:128], ys[:128]
+    clean = _acc(InferenceEngine(dep, buckets=(128,)), xb, yb)
+    curve = {}
+    for sigma in (0.0, 0.1, 0.25, 0.5, 1.0):
+        pert = perturb_frozen(dep, phase_sigma=sigma, seed=7)
+        acc = _acc(InferenceEngine(pert, buckets=(128,)), xb, yb)
+        if sigma == 0.0 and acc != clean:
+            raise AssertionError("sigma=0 must reproduce the clean accuracy")
+        curve[sigma] = round(acc, 4)
+        row(f"resilience/phase_noise/s{sigma}", sigma * 1e6,
+            f"acc={acc:.3f} clean={clean:.3f}")
+        rows.append({"name": f"resilience/phase_noise/s{sigma}",
+                     "us": sigma * 1e6, "derived": f"acc={acc:.4f}"})
+    for label, kw in (("dead_pixels_2pct", dict(dead_frac=0.02)),
+                      ("misalign_1px", dict(shift_px=1))):
+        pert = perturb_frozen(dep, seed=8, **kw)
+        acc = _acc(InferenceEngine(pert, buckets=(128,)), xb, yb)
+        curve[label] = round(acc, 4)
+        row(f"resilience/{label}", 0.0, f"acc={acc:.3f} clean={clean:.3f}")
+        rows.append({"name": f"resilience/{label}", "us": 0.0,
+                     "derived": f"acc={acc:.4f}"})
+    curve["clean"] = round(clean, 4)
+    return curve
+
+
+def main() -> None:
+    rows: list = []
+    model, params, xs, ys = _trained_model()
+    dep = freeze(model, params)
+    engine = InferenceEngine(dep, buckets=(1, 2, 4, 8))
+    engine.warmup()
+    with tempfile.TemporaryDirectory() as tmpdir:
+        summary = {
+            "cold_start": _bench_cold_start(rows, model, params, tmpdir),
+            "overload": _bench_overload(rows, engine),
+            "deadline": _bench_deadline(rows, engine),
+            "phase_noise": _bench_phase_noise(rows, model, params, xs, ys),
+        }
+    meta = {
+        "backend": jax.default_backend(),
+        "cores": os.cpu_count(),
+        "summary": summary,
+    }
+    write_bench_json("resilience", rows, meta)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
   hetero      -> bench_hetero (segmented plans + ragged-depth DSE)
   train_throughput -> bench_train_throughput (chunked training drivers)
   inference_throughput -> bench_inference_throughput (deployment engine)
+  resilience  -> bench_resilience (overload shed, cold-start, noise curves)
   (env)       -> bench_roofline (reads the dry-run artifacts)
 
 Usage: ``python benchmarks/run.py [--check] [filter ...]`` — any number
@@ -32,7 +33,7 @@ import traceback
 
 # suites whose cells gate CI: they must be fresh in the uploaded summary
 TIER1_SUITES = ("propagation_plan", "dse_batched", "hetero",
-                "train_throughput", "inference_throughput")
+                "train_throughput", "inference_throughput", "resilience")
 
 
 def stale_tier1(summary: dict) -> list:
@@ -84,6 +85,7 @@ def main() -> None:
         bench_kernel_breakdown,
         bench_propagation_plan,
         bench_regularization,
+        bench_resilience,
         bench_rgb,
         bench_roofline,
         bench_runtime,
@@ -103,6 +105,7 @@ def main() -> None:
         ("hetero", bench_hetero.main),
         ("train_throughput", bench_train_throughput.main),
         ("inference_throughput", bench_inference_throughput.main),
+        ("resilience", bench_resilience.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),

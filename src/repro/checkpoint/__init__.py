@@ -3,6 +3,8 @@ from repro.checkpoint.store import (
     latest_step,
     restore,
     save,
+    valid_steps,
 )
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save",
+           "valid_steps"]

@@ -143,24 +143,62 @@ def _gc(ckpt_dir: pathlib.Path, keep: int):
         shutil.rmtree(d, ignore_errors=True)
 
 
+def _manifest_ok(step_dir: pathlib.Path) -> bool:
+    """A checkpoint directory is usable iff its manifest parses."""
+    try:
+        json.loads((step_dir / "MANIFEST.json").read_text())
+        return True
+    except (OSError, ValueError):
+        return False
+
+
+def valid_steps(ckpt_dir) -> list:
+    """All step numbers with a parseable MANIFEST.json, ascending."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.is_dir():
+        return []
+    out = []
+    for d in ckpt_dir.iterdir():
+        if (d.is_dir() and d.name.startswith("step_")
+                and not d.name.endswith(".tmp") and _manifest_ok(d)):
+            try:
+                out.append(int(d.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return sorted(out)
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
+    """Newest usable checkpoint step, or None.
+
+    Follows the LATEST pointer when it names a directory with a valid
+    manifest; when the pointer is missing, dangling or points at a corrupt
+    directory, falls back to scanning for the newest ``step_*`` directory
+    whose MANIFEST.json parses — older valid checkpoints stay reachable
+    even after the newest one is damaged.
+    """
     ckpt_dir = pathlib.Path(ckpt_dir)
     ptr = ckpt_dir / "LATEST"
-    if not ptr.exists():
-        return None
-    name = ptr.read_text().strip()
-    if not (ckpt_dir / name / "MANIFEST.json").exists():
-        return None
-    return int(name.split("_")[1])
+    if ptr.exists():
+        name = ptr.read_text().strip()
+        if _manifest_ok(ckpt_dir / name):
+            return int(name.split("_")[1])
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
-            verify: bool = False):
+            verify: bool = True):
     """Restore into the structure of ``target_tree``.
 
     ``target_tree`` provides the pytree structure (values ignored);
     ``shardings`` (same structure, optional) gives per-leaf shardings for
     elastic placement onto the current mesh.
+
+    ``verify`` (default on, matching ``save``) recomputes each chunk's
+    crc32 against the manifest and raises ``IOError`` on mismatch — silent
+    bit-rot never reaches the restored pytree.  Pass ``verify=False`` only
+    to skip the checksum pass on trusted local storage.
     """
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "MANIFEST.json").read_text())

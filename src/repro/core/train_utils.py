@@ -73,6 +73,8 @@ class TrainResult:
     losses: list
     accs: list
     wall_time_s: float
+    skipped_steps: int = 0  # guarded steps dropped for non-finite loss/grads
+    rollbacks: int = 0      # checkpoint restores triggered by the guard
 
 
 def optimizer_cache_key(optimizer) -> Optional[tuple]:
@@ -140,7 +142,8 @@ def make_train_step(model, optimizer, num_classes: int, needs_rng: bool = False)
 
 
 def make_train_chunk(model, optimizer, num_classes: int,
-                     needs_rng: bool = False, donate: bool = True):
+                     needs_rng: bool = False, donate: bool = True,
+                     guard: bool = False):
     """Donated multi-step scanned training driver (the throughput engine).
 
     Returns ``chunk_fn(params, opt_state, step0, xs, ys, rng) -> (params,
@@ -154,6 +157,16 @@ def make_train_chunk(model, optimizer, num_classes: int,
     - the rng chain matches the per-step loop exactly (``rng, sub =
       split(rng)`` before each step), so chunked training is numerically
       identical to ``make_train_step`` iterated S times.
+
+    ``guard=True`` adds **device-side non-finite detection** to every
+    step: when the loss or any gradient leaf is non-finite, the update is
+    dropped wholesale (params, opt_state and the bias-correction step
+    counter stay at their pre-step values — a skipped step is a no-op)
+    and the step is flagged.  The chunk then returns two extra metrics,
+    ``(..., losses, accs, skipped, params_ok)`` with ``skipped`` an (S,)
+    bool array and ``params_ok`` a scalar "all params finite" flag — both
+    accumulate on device and ride the existing one-sync-per-chunk
+    metrics, adding **zero** host syncs to the hot loop.
 
     Like ``make_train_step`` it rides the process-wide executable cache
     when the model/optimizer are cache-keyable.
@@ -173,20 +186,42 @@ def make_train_chunk(model, optimizer, num_classes: int,
             (loss, logits), grads = jax.value_and_grad(
                 loss_fn, has_aux=True
             )(params, xb, yb, sub)
-            params, opt_state = optimizer.update(grads, opt_state, params,
-                                                 step)
-            return ((params, opt_state, step + 1, rng),
-                    (loss, accuracy(logits, yb)))
+            if not guard:
+                params, opt_state = optimizer.update(
+                    grads, opt_state, params, step
+                )
+                return ((params, opt_state, step + 1, rng),
+                        (loss, accuracy(logits, yb)))
+            ok = jnp.isfinite(loss)
+            for g in jax.tree.leaves(grads):
+                ok &= jnp.all(jnp.isfinite(g))
+            new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                                   step)
+            keep = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(ok, a, b), new, old
+            )
+            # a skipped step is a full no-op: state, optimizer moments AND
+            # the bias-correction step counter all stay pre-step
+            return ((keep(new_params, params), keep(new_opt, opt_state),
+                     jnp.where(ok, step + 1, step), rng),
+                    (loss, accuracy(logits, yb), ~ok))
 
         carry = (params, opt_state, jnp.asarray(step0, jnp.int32), rng)
-        (params, opt_state, _, rng), (losses, accs) = jax.lax.scan(
+        (params, opt_state, _, rng), metrics = jax.lax.scan(
             body, carry, (xs, ys)
         )
-        return params, opt_state, rng, losses, accs
+        if not guard:
+            losses, accs = metrics
+            return params, opt_state, rng, losses, accs
+        losses, accs, skipped = metrics
+        params_ok = jnp.array(True)
+        for p in jax.tree.leaves(params):
+            params_ok &= jnp.all(jnp.isfinite(p))
+        return params, opt_state, rng, losses, accs, skipped, params_ok
 
     donate_n = (0, 1) if donate else ()
     skey = _train_static_key("donn_train_chunk", model, optimizer,
-                             num_classes, needs_rng, donate)
+                             num_classes, needs_rng, donate, guard)
     if skey is None:
         return jax.jit(chunk_impl, donate_argnums=donate_n)
     from repro.core import propagation as pp
@@ -213,6 +248,10 @@ def train_classifier(
     log_every: int = 0,
     steps_per_call: int = 1,
     prefetch: int = 2,
+    guard: bool = False,
+    ckpt_dir=None,
+    ckpt_every: int = 0,
+    max_rollbacks: int = 2,
 ) -> TrainResult:
     """Compact Adam training loop for DONN classifiers (paper uses Adam+MSE).
 
@@ -223,12 +262,25 @@ def train_classifier(
     and the host syncs once per chunk.  Numerics (losses, rng chain, final
     params) are identical to the per-step path.  ``prefetch`` bounds the
     prefetcher's in-flight chunk count (0 disables it).
+
+    ``guard=True`` (chunked path only) turns on the non-finite guardrails:
+    poisoned steps (NaN/inf loss or grads) are skipped device-side as
+    exact no-ops and counted in ``TrainResult.skipped_steps``.  With
+    ``ckpt_dir`` set, (params, opt_state, rng, step) checkpoint through
+    ``repro.checkpoint`` every ``ckpt_every`` steps (plus once at step 0),
+    and a chunk that comes back fully skipped or with non-finite params
+    **rolls back** to the last good checkpoint and resumes — at most
+    ``max_rollbacks`` times (counted in ``TrainResult.rollbacks``);
+    beyond that a ``RuntimeError`` surfaces the divergence.
     """
     optimizer = AdamW(lr=lr)
     opt_state = optimizer.init(params)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     losses, accs = [], []
     t0 = time.perf_counter()
+    if guard and steps_per_call <= 1:
+        raise ValueError("guard=True requires the chunked driver "
+                         "(steps_per_call > 1)")
     if steps_per_call <= 1:
         step_fn = make_train_step(model, optimizer, num_classes, needs_rng)
         for i in range(steps):
@@ -250,15 +302,55 @@ def train_classifier(
     # once so their reference stays valid after training
     params = jax.tree.map(jnp.array, params)
     opt_state = jax.tree.map(jnp.array, opt_state)
-    chunk_fn = make_train_chunk(model, optimizer, num_classes, needs_rng)
+    chunk_fn = make_train_chunk(model, optimizer, num_classes, needs_rng,
+                                guard=guard)
     chunks = stack_batches(data_iter, steps_per_call, total=steps)
     if prefetch:
         chunks = device_prefetch(chunks, size=prefetch)
-    i = 0
+
+    skipped_total, rollbacks = 0, 0
+    last_good: Optional[int] = None
+    # i indexes the data stream / metric lists; opt_step is the optimizer's
+    # bias-correction counter — they diverge when guarded steps are skipped
+    # (a skipped step consumes a batch but must not advance the optimizer)
+    i, opt_step = 0, 0
+    if ckpt_dir is not None:
+        from repro import checkpoint as ckpt
+
+        def _ckpt_state():
+            return {"params": params, "opt": opt_state, "rng": rng,
+                    "opt_step": jnp.asarray(opt_step, jnp.int32)}
+
+        # a rollback target must exist before the first chunk can fail
+        ckpt.save(ckpt_dir, 0, _ckpt_state(), keep=3)
+        last_good = 0
     for xs, ys in chunks:
-        params, opt_state, rng, closs, cacc = chunk_fn(
-            params, opt_state, i, xs, ys, rng
-        )
+        out = chunk_fn(params, opt_state, opt_step, xs, ys, rng)
+        if guard:
+            params, opt_state, rng, closs, cacc, skipped, params_ok = out
+            skipped = np.asarray(skipped)  # chunk sync (with the metrics)
+            bad_chunk = (not bool(params_ok)) or bool(skipped.all())
+            if bad_chunk and last_good is not None:
+                if rollbacks >= max_rollbacks:
+                    raise RuntimeError(
+                        f"training diverged at step {i} and the rollback "
+                        f"budget ({max_rollbacks}) is exhausted"
+                    )
+                state = ckpt.restore(ckpt_dir, last_good, _ckpt_state())
+                params = jax.tree.map(jnp.array, state["params"])
+                opt_state = jax.tree.map(jnp.array, state["opt"])
+                rng = jnp.asarray(state["rng"])
+                opt_step = int(state["opt_step"])
+                del losses[last_good:], accs[last_good:]  # rolled-back steps
+                i = last_good
+                rollbacks += 1
+                continue
+            n_skip = int(skipped.sum())
+            skipped_total += n_skip
+            opt_step += int(xs.shape[0]) - n_skip
+        else:
+            params, opt_state, rng, closs, cacc = out
+            opt_step += int(xs.shape[0])
         closs, cacc = np.asarray(closs), np.asarray(cacc)  # one sync/chunk
         losses.extend(closs.tolist())
         accs.extend(cacc.tolist())
@@ -269,7 +361,12 @@ def train_classifier(
                     print(f"step {i + j:4d}  loss {closs[j]:.4f}  "
                           f"acc {cacc[j]:.3f}")
         i += int(xs.shape[0])
-    return TrainResult(params, losses, accs, time.perf_counter() - t0)
+        if (last_good is not None and ckpt_every
+                and i - last_good >= ckpt_every):
+            ckpt.save(ckpt_dir, i, _ckpt_state(), keep=3)
+            last_good = i
+    return TrainResult(params, losses, accs, time.perf_counter() - t0,
+                       skipped_steps=skipped_total, rollbacks=rollbacks)
 
 
 def evaluate_classifier(model, params, data_iter, batches: int,

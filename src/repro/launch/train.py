@@ -6,6 +6,9 @@ on whatever devices exist, with:
   automatic resume from LATEST (elastic: the restore reslices to the
   current mesh, so you can restart on a different device count);
 - preemption safety: SIGTERM/SIGINT triggers save-and-exit(143);
+- non-finite guardrail: a NaN/inf loss rolls the run back to the last
+  good checkpoint and resumes (bounded by --max-rollbacks; without a
+  checkpoint to return to, the run aborts instead of training on garbage);
 - straggler monitoring: per-step EMA + z-score flags;
 - background prefetch of the (deterministic, per-host-shardable) synthetic
   data stream.
@@ -18,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import signal
 import sys
 
@@ -52,6 +56,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--max-rollbacks", type=int, default=2,
+                    help="non-finite-loss recoveries before aborting")
     args = ap.parse_args(argv)
 
     cfg: LMConfig = get_config(args.arch, smoke=args.smoke)
@@ -100,10 +106,6 @@ def main(argv=None):
     saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=args.keep) \
         if args.ckpt_dir else None
     monitor = StepMonitor()
-    raw_it = token_batch_iterator(args.batch, args.seq, cfg.vocab,
-                                  seed=args.seed)
-    for _ in range(start_step):  # resume: replay the deterministic stream
-        next(raw_it)
 
     def to_device(b):
         if cfg.family == "vlm":
@@ -116,14 +118,45 @@ def main(argv=None):
             ).astype("float32")
         return jax.device_put(b, b_shard)
 
-    it = Prefetcher(raw_it, depth=2, transform=to_device)
+    def make_stream(skip: int) -> Prefetcher:
+        """Deterministic data stream positioned at step ``skip`` — used at
+        start, on resume and again after a non-finite rollback."""
+        raw_it = token_batch_iterator(args.batch, args.seq, cfg.vocab,
+                                      seed=args.seed)
+        for _ in range(skip):  # replay the deterministic stream
+            next(raw_it)
+        return Prefetcher(raw_it, depth=2, transform=to_device)
+
+    it = make_stream(start_step)
     losses = []
-    for i in range(start_step, args.steps):
+    rollbacks = 0
+    i = start_step
+    while i < args.steps:
         batch = next(it)
         monitor.start()
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         monitor.stop(i)
+        # ---- non-finite guardrail: roll back instead of training on ----
+        if not math.isfinite(loss):
+            if saver:
+                saver.wait()  # in-flight commit may BE the rollback target
+            last = ckpt.latest_step(args.ckpt_dir) if args.ckpt_dir else None
+            if last is None or rollbacks >= args.max_rollbacks:
+                print(f"[train] non-finite loss at step {i} and no "
+                      "rollback available; aborting", flush=True)
+                raise RuntimeError(f"non-finite loss at step {i}")
+            rollbacks += 1
+            print(f"[train] non-finite loss at step {i}: rolling back to "
+                  f"step {last} ({rollbacks}/{args.max_rollbacks})",
+                  flush=True)
+            state = ckpt.restore(args.ckpt_dir, last,
+                                 shd.abstract_like(sspecs),
+                                 shardings=s_shard)
+            del losses[max(0, last - start_step):]
+            it = make_stream(last)
+            i = last
+            continue
         losses.append(loss)
         if i % args.log_every == 0:
             print(f"step {i:5d}  loss {loss:.4f}  "
@@ -136,6 +169,7 @@ def main(argv=None):
                 saver.wait()
             print("[train] preempted; checkpoint committed")
             sys.exit(143)
+        i += 1
     if saver:
         saver.save(args.steps, state)
         saver.wait()

@@ -49,6 +49,7 @@ import numpy as np
 from repro.core import diffraction as df
 from repro.core.laser import data_to_cplex
 from repro.data.pipeline import bucket_for, pad_batch
+from repro.runtime.resilience import DeadlineExceededError, OverloadedError
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
 
@@ -129,6 +130,42 @@ class DeployedDONN:
         return ("deployed_donn", self.family, config_static_key(self.cfg))
 
 
+def deployed_from_model(model, frozen, source=None) -> DeployedDONN:
+    """Assemble a ``DeployedDONN`` around a built model + ready-made planes.
+
+    The structural half of ``freeze``: plan, detector, grids and skip
+    wiring come from the model; the modulation planes are supplied by the
+    caller (``freeze`` computes them from trained params;
+    ``runtime.resilience.load_deployed`` restores them from a serialized
+    artifact without touching params or codesign at all).  ``source``
+    optionally overrides the model's laser field (artifacts persist the
+    resolved field so non-default lasers survive the round-trip).
+    """
+    from repro.core import models as md
+
+    if isinstance(model, md.MultiChannelDONN):
+        cm = model.channel_model
+        return DeployedDONN(
+            model.cfg, "multi", cm.plan, frozen,
+            cm.source if source is None else source, cm.in_grid.n,
+            detector=cm.detector,
+        )
+    if isinstance(model, md.SegmentationDONN):
+        return DeployedDONN(
+            model.cfg, "seg", model.plan, frozen,
+            model.source if source is None else source, model.in_grid.n,
+            skip_from=model.skip_from,
+            skip_hop=getattr(model, "skip_hop", None), out_grid=model.grid,
+        )
+    if not isinstance(model, md.DONN):
+        raise TypeError(f"cannot freeze {type(model).__name__}")
+    return DeployedDONN(
+        model.cfg, "cls", model.plan, frozen,
+        model.source if source is None else source, model.in_grid.n,
+        detector=model.detector,
+    )
+
+
 def freeze(model, params) -> DeployedDONN:
     """Fold a trained model + params into a serving artifact.
 
@@ -144,27 +181,19 @@ def freeze(model, params) -> DeployedDONN:
         phis = cm.plan.stack_phases(
             params["phase"][f"layer_{i}"] for i in range(len(cm.layers))
         )
-        return DeployedDONN(
-            model.cfg, "multi", cm.plan, cm.plan.frozen_modulation(phis),
-            cm.source, cm.in_grid.n, detector=cm.detector,
-        )
-    if isinstance(model, md.SegmentationDONN):
-        phis = model.plan.stack_phases(
-            params["phase"][f"layer_{i}"] for i in range(len(model.layers))
-        )
-        return DeployedDONN(
-            model.cfg, "seg", model.plan,
-            model.plan.frozen_modulation(phis), model.source,
-            model.in_grid.n, skip_from=model.skip_from,
-            skip_hop=getattr(model, "skip_hop", None), out_grid=model.grid,
-        )
-    if not isinstance(model, md.DONN):
+        frozen = cm.plan.frozen_modulation(phis)
+    elif isinstance(model, md.SegmentationDONN) or isinstance(model, md.DONN):
+        if isinstance(model, md.DONN):
+            phis = model.stacked_phases(params)
+        else:
+            phis = model.plan.stack_phases(
+                params["phase"][f"layer_{i}"]
+                for i in range(len(model.layers))
+            )
+        frozen = model.plan.frozen_modulation(phis)
+    else:
         raise TypeError(f"cannot freeze {type(model).__name__}")
-    return DeployedDONN(
-        model.cfg, "cls", model.plan,
-        model.plan.frozen_modulation(model.stacked_phases(params)),
-        model.source, model.in_grid.n, detector=model.detector,
-    )
+    return deployed_from_model(model, frozen)
 
 
 # --------------------------------------------------------------------------
@@ -334,6 +363,18 @@ class InferenceEngine:
         return np.concatenate(outs, axis=0)
 
 
+class _Request:
+    """One queued inference request (slots: this sits on the hot path)."""
+
+    __slots__ = ("x", "future", "t_arrival", "deadline")
+
+    def __init__(self, x, future, t_arrival, deadline):
+        self.x = x
+        self.future = future
+        self.t_arrival = t_arrival
+        self.deadline = deadline  # absolute perf_counter time, or None
+
+
 class MicroBatcher:
     """Batch-full-or-deadline request dispatcher over an ``InferenceEngine``.
 
@@ -342,68 +383,196 @@ class MicroBatcher:
     the queue whenever the largest bucket fills or the oldest queued
     request has waited ``max_wait_ms``, pads the group to the nearest
     bucket and serves it as one device call.
+
+    Hardened for real traffic (``repro.runtime.resilience``):
+
+    - **bounded admission** — at most ``max_queue`` requests wait; beyond
+      that ``submit`` sheds with ``OverloadedError`` instead of growing
+      the queue (and the tail latency) without bound;
+    - **per-request deadlines** — ``submit(x, timeout_ms=...)`` fails the
+      future with ``DeadlineExceededError`` once the deadline passes
+      undispatched, instead of waiting forever behind a stall;
+    - **submit-time validation** — shape/dtype mismatches are rejected at
+      the door (``ValueError``/``TypeError``) before they can poison a
+      batch (``validate=False`` restores trust-the-caller behavior);
+    - **group bisection** — a group that fails to serve is split in half
+      and retried, so one poison request fails only its own future while
+      the rest of the group still gets results;
+    - **accounted shutdown** — ``close()`` returns True for a clean drain;
+      on an unclean join it fails every unresolved future and returns
+      False instead of silently stranding callers.
     """
 
-    def __init__(self, engine: InferenceEngine, max_wait_ms: float = 2.0):
+    def __init__(self, engine: InferenceEngine, max_wait_ms: float = 2.0,
+                 max_queue: Optional[int] = 1024, validate: bool = True):
         self.engine = engine
         self.max_wait_s = max_wait_ms / 1e3
+        self.max_queue = None if not max_queue else int(max_queue)
+        self.validate = validate
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._pending: list = []  # (x, future, t_arrival)
+        self._pending: list = []  # [_Request]
+        self._inflight: list = []  # group currently being served
         self._closed = False
+        self.stats = {"submitted": 0, "served": 0, "shed": 0, "expired": 0,
+                      "failed": 0}
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
-    def submit(self, x) -> Future:
+    # --- admission ---
+    def _expected_shape(self) -> tuple:
+        cfg = self.engine.deployed.cfg
+        n = cfg.input_size
+        if self.engine.deployed.family == "multi":
+            return (cfg.channels, n, n)
+        return (n, n)
+
+    def _validate(self, x: np.ndarray):
+        if not (np.issubdtype(x.dtype, np.floating)
+                or np.issubdtype(x.dtype, np.integer)
+                or np.issubdtype(x.dtype, np.bool_)):
+            raise TypeError(
+                f"request dtype {x.dtype} is not castable to float32"
+            )
+        exp = self._expected_shape()
+        if x.shape != exp:
+            raise ValueError(
+                f"request shape {x.shape} != expected per-request shape "
+                f"{exp} for the {self.engine.deployed.family!r} family"
+            )
+
+    def submit(self, x, timeout_ms: Optional[float] = None) -> Future:
+        """Enqueue one request; returns a Future resolving to its output.
+
+        Raises ``OverloadedError`` when the admission queue is full (load
+        shedding — the caller should back off / retry elsewhere) and
+        ``ValueError``/``TypeError`` on malformed requests when
+        ``validate`` is on.  With ``timeout_ms`` set, the future fails
+        with ``DeadlineExceededError`` if still undispatched then.
+        """
+        x = np.asarray(x)
+        if self.validate:
+            self._validate(x)
+        now = time.perf_counter()
+        deadline = None if timeout_ms is None else now + timeout_ms / 1e3
         fut: Future = Future()
         with self._cv:
             if self._closed:
                 raise RuntimeError("MicroBatcher is closed")
-            self._pending.append((np.asarray(x), fut, time.perf_counter()))
+            if (self.max_queue is not None
+                    and len(self._pending) >= self.max_queue):
+                self.stats["shed"] += 1
+                raise OverloadedError(
+                    f"admission queue full ({self.max_queue} pending)"
+                )
+            self._pending.append(_Request(x, fut, now, deadline))
+            self.stats["submitted"] += 1
             self._cv.notify()
         return fut
 
-    def _take(self) -> list:
-        """Block until a group is ready (full bucket or deadline hit)."""
+    # --- dispatch ---
+    def _split_expired(self, now: float) -> list:
+        """Pop expired requests off the queue (caller holds the lock)."""
+        expired = [r for r in self._pending
+                   if r.deadline is not None and now >= r.deadline]
+        if expired:
+            self._pending = [r for r in self._pending if r not in expired]
+        return expired
+
+    def _take(self) -> tuple:
+        """Block until work is ready: (group_to_serve, expired_requests).
+
+        Both empty means the batcher is closed and drained.
+        """
         b_max = self.engine.buckets[-1]
         with self._cv:
             while True:
+                now = time.perf_counter()
+                expired = self._split_expired(now)
+                if expired:
+                    return [], expired
                 if self._closed and not self._pending:
-                    return []
+                    return [], []
                 if self._pending:
                     if len(self._pending) >= b_max or self._closed:
                         break
-                    waited = time.perf_counter() - self._pending[0][2]
-                    if waited >= self.max_wait_s:
+                    timeout = self.max_wait_s - (now - self._pending[0].t_arrival)
+                    dls = [r.deadline for r in self._pending
+                           if r.deadline is not None]
+                    if dls:
+                        timeout = min(timeout, min(dls) - now)
+                    if timeout <= 0:
                         break
-                    self._cv.wait(timeout=self.max_wait_s - waited)
+                    self._cv.wait(timeout=timeout)
                 else:
                     self._cv.wait(timeout=0.1)
             group = self._pending[:b_max]
             del self._pending[:len(group)]
-            return group
+            self._inflight = group
+            return group, []
+
+    def _serve(self, group: list):
+        """Serve a group; on failure bisect so only poison requests fail."""
+        try:
+            # the stack is inside the try: a malformed request (e.g. a
+            # mismatched image shape with validate off) must fail, not
+            # kill the worker and hang every later submit
+            xs = np.stack([r.x for r in group])
+            outs = self.engine.infer(xs)
+        except Exception as e:  # noqa: BLE001 - propagate to callers
+            if len(group) == 1:
+                if not group[0].future.done():
+                    group[0].future.set_exception(e)
+                self.stats["failed"] += 1
+                return
+            mid = len(group) // 2
+            self._serve(group[:mid])
+            self._serve(group[mid:])
+            return
+        for r, out in zip(group, outs):
+            if not r.future.done():
+                r.future.set_result(out)
+            self.stats["served"] += 1
 
     def _run(self):
         while True:
-            group = self._take()
-            if not group:
+            group, expired = self._take()
+            for r in expired:
+                if not r.future.done():
+                    r.future.set_exception(DeadlineExceededError(
+                        "request deadline expired before dispatch"
+                    ))
+                self.stats["expired"] += 1
+            if not group and not expired:
                 return
-            try:
-                # the stack is inside the try: a malformed request (e.g. a
-                # mismatched image shape) must fail its group's futures,
-                # not kill the worker and hang every later submit
-                xs = np.stack([g[0] for g in group])
-                outs = self.engine.infer(xs)
-                for (_, fut, _), out in zip(group, outs):
-                    fut.set_result(out)
-            except Exception as e:  # noqa: BLE001 - propagate to callers
-                for _, fut, _ in group:
-                    if not fut.done():
-                        fut.set_exception(e)
+            if group:
+                self._serve(group)
+                with self._cv:
+                    self._inflight = []
 
-    def close(self):
-        """Drain the queue and stop the worker."""
+    def close(self, timeout: float = 30.0) -> bool:
+        """Drain the queue and stop the worker.
+
+        Returns True on a clean drain.  If the worker fails to join
+        within ``timeout`` seconds (e.g. wedged inside a device call),
+        every unresolved pending/in-flight future is failed with a
+        ``RuntimeError`` so no caller blocks forever, and False is
+        returned — callers that care must check it.
+        """
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        self._worker.join(timeout=30.0)
+        self._worker.join(timeout=timeout)
+        if not self._worker.is_alive():
+            return True
+        with self._cv:
+            stranded = self._pending + self._inflight
+            self._pending = []
+        err = RuntimeError(
+            f"MicroBatcher shutdown unclean: worker did not join within "
+            f"{timeout}s; {len(stranded)} request(s) abandoned"
+        )
+        for r in stranded:
+            if not r.future.done():
+                r.future.set_exception(err)
+        return False

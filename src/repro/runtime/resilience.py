@@ -1,0 +1,261 @@
+"""Serving resilience layer: serialized artifacts + engine supervision.
+
+The deployment engine (``repro.runtime.inference``) made frozen DONNs fast;
+this module makes them *survivable*.  Real deployments face process crashes,
+node swaps and reconfigurable hardware that is reprogrammed in the field
+(arXiv 2411.05748), so a served model must outlive the process that froze
+it:
+
+1.  **Serialized frozen artifacts** — ``save_deployed(deployed, dir)``
+    persists everything serving needs: the architecture as a JSON spec
+    (``dsl.to_spec``), the precomputed modulation planes and the resolved
+    laser source field through the integrity-checked ``checkpoint.store``
+    (atomic commit, per-chunk crc32).  ``load_deployed(dir)`` cold-starts a
+    ``DeployedDONN`` from disk with **no training state** — no params
+    pytree, no optimizer, no codesign resolution — and bit-identical
+    outputs to the original ``freeze()`` (tests/test_resilience.py).
+
+2.  **Typed serving failures** — ``OverloadedError`` (bounded admission
+    queue full: load is shed instead of queued unboundedly) and
+    ``DeadlineExceededError`` (a request's ``timeout_ms`` expired before
+    dispatch), raised by the hardened ``MicroBatcher``.
+
+3.  **Engine supervision** — ``EngineSupervisor`` owns an engine built
+    from a serialized artifact, health-checks it with probe requests,
+    restarts it from the artifact when it fails (bounded restart budget)
+    and exposes readiness + error-rate stats for load balancers.
+
+Fault scenarios are driven end-to-end by ``repro.testing.faults`` and
+measured by ``benchmarks/bench_resilience.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+ARTIFACT_FORMAT = 1
+ARTIFACT_FILE = "ARTIFACT.json"
+PLANES_DIR = "planes"
+
+
+class OverloadedError(RuntimeError):
+    """Admission queue full: the request was shed, not enqueued."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """The request's deadline expired before it could be dispatched."""
+
+
+# --------------------------------------------------------------------------
+# Serialized frozen artifacts
+# --------------------------------------------------------------------------
+def save_deployed(deployed, artifact_dir) -> pathlib.Path:
+    """Persist a ``DeployedDONN`` as a cold-startable serving artifact.
+
+    Layout::
+
+        artifact_dir/
+          ARTIFACT.json   # format version, family, dsl.to_spec(cfg)
+          planes/         # checkpoint.store tree: modulation planes + source
+
+    The modulation planes ride the checkpoint store's atomic-commit +
+    crc32 protocol, so a torn write or bit-rot is detected at load time
+    rather than silently serving a corrupted model.  ``ARTIFACT.json`` is
+    committed last via tmp+rename: a directory with a manifest is a
+    complete artifact.
+    """
+    from repro.checkpoint import store
+    from repro.core import dsl
+
+    artifact_dir = pathlib.Path(artifact_dir)
+    artifact_dir.mkdir(parents=True, exist_ok=True)
+    frozen = deployed.frozen
+    meta = {
+        "format": ARTIFACT_FORMAT,
+        "family": deployed.family,
+        # None for uniform plans (one (a, b) pair); segment count for
+        # segmented plans (tuple of pairs) — fixes the restore treedef
+        "segments": len(frozen) if deployed.heterogeneous else None,
+        "spec": dsl.to_spec(deployed.cfg),
+    }
+    store.save(artifact_dir / PLANES_DIR, 0,
+               {"frozen": frozen, "source": deployed.source}, keep=1)
+    tmp = artifact_dir / (ARTIFACT_FILE + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, artifact_dir / ARTIFACT_FILE)
+    return artifact_dir
+
+
+def load_deployed(artifact_dir, *, verify: bool = True):
+    """Cold-start a ``DeployedDONN`` from a serialized artifact.
+
+    Rebuilds the architecture from the JSON spec (``dsl.from_spec`` — the
+    same validated path config-file builds use) and restores the frozen
+    modulation planes + source field from the checkpoint store (crc32
+    verified by default).  No trained params, optimizer state or codesign
+    resolution is touched: the artifact alone is the deployment.  Outputs
+    are bit-identical to the ``DeployedDONN`` that was saved.
+    """
+    from repro.checkpoint import store
+    from repro.core import dsl
+    from repro.runtime import inference as inf
+
+    artifact_dir = pathlib.Path(artifact_dir)
+    meta_path = artifact_dir / ARTIFACT_FILE
+    if not meta_path.exists():
+        raise FileNotFoundError(f"no {ARTIFACT_FILE} under {artifact_dir}")
+    meta = json.loads(meta_path.read_text())
+    if meta.get("format") != ARTIFACT_FORMAT:
+        raise ValueError(
+            f"unsupported artifact format {meta.get('format')!r} "
+            f"(this build reads format {ARTIFACT_FORMAT})"
+        )
+    model, _cfg = dsl.from_spec(meta["spec"])
+    nseg = meta.get("segments")
+    pair = (0.0, 0.0)
+    target = {
+        "frozen": pair if nseg is None else tuple(pair for _ in range(nseg)),
+        "source": 0.0,
+    }
+    state = store.restore(artifact_dir / PLANES_DIR, 0, target, verify=verify)
+    return inf.deployed_from_model(model, state["frozen"],
+                                   source=state["source"])
+
+
+# --------------------------------------------------------------------------
+# Engine supervision
+# --------------------------------------------------------------------------
+class EngineSupervisor:
+    """Owns a serving engine; health-checks, restarts, reports.
+
+    Built around a *serialized artifact* rather than a live model: a
+    crashed engine is recovered by reloading the artifact from disk
+    (``load_deployed`` + fresh ``InferenceEngine`` + warmup), exactly the
+    path a cold-started replacement process would take — so a supervisor
+    restart proves the artifact is sufficient to serve.
+
+    - ``infer(x)`` proxies to the engine; on failure it records the error,
+      restarts from the artifact (bounded by ``max_restarts``) and retries
+      the request once on the fresh engine.
+    - ``health_check()`` pushes a probe batch through the engine and
+      updates readiness without touching request stats.
+    - ``stats()`` exposes ``ready``, ``restarts``, ``requests``,
+      ``errors`` and ``error_rate`` for balancers / dashboards.
+
+    ``engine_factory(deployed) -> engine`` customizes engine construction
+    (extra buckets, multi-device dispatch, or fault injection in tests).
+    """
+
+    def __init__(self, artifact_dir, *, buckets: Optional[Sequence[int]] = None,
+                 engine_factory=None, max_restarts: int = 3,
+                 warmup_buckets: Optional[Sequence[int]] = None,
+                 verify: bool = True):
+        self.artifact_dir = pathlib.Path(artifact_dir)
+        self.buckets = buckets
+        self.engine_factory = engine_factory
+        self.max_restarts = int(max_restarts)
+        self.warmup_buckets = warmup_buckets
+        self.verify = verify
+        self.engine = None
+        self._ready = False
+        self._lock = threading.Lock()
+        self._stats = {"requests": 0, "errors": 0, "restarts": 0,
+                       "last_start_s": None}
+
+    # --- lifecycle ---
+    def _build_engine(self):
+        from repro.runtime.inference import DEFAULT_BUCKETS, InferenceEngine
+
+        deployed = load_deployed(self.artifact_dir, verify=self.verify)
+        if self.engine_factory is not None:
+            engine = self.engine_factory(deployed)
+        else:
+            engine = InferenceEngine(
+                deployed, buckets=self.buckets or DEFAULT_BUCKETS
+            )
+        if hasattr(engine, "warmup"):
+            engine.warmup(self.warmup_buckets)
+        return engine
+
+    def start(self):
+        """Cold-start the engine from the artifact (idempotent)."""
+        with self._lock:
+            if self.engine is None:
+                t0 = time.perf_counter()
+                self.engine = self._build_engine()
+                self._stats["last_start_s"] = time.perf_counter() - t0
+                self._ready = True
+        return self
+
+    def restart(self):
+        """Tear down the engine and rebuild it from the artifact."""
+        with self._lock:
+            if self._stats["restarts"] >= self.max_restarts:
+                self._ready = False
+                raise RuntimeError(
+                    f"engine restart budget exhausted "
+                    f"({self.max_restarts} restarts)"
+                )
+            self._stats["restarts"] += 1
+            self._ready = False
+            t0 = time.perf_counter()
+            self.engine = self._build_engine()
+            self._stats["last_start_s"] = time.perf_counter() - t0
+            self._ready = True
+        return self
+
+    # --- serving ---
+    def infer(self, x) -> np.ndarray:
+        """Serve through the engine; restart from the artifact on failure.
+
+        The failed request is retried once on the restarted engine; a
+        second failure (or an exhausted restart budget) propagates to the
+        caller with the supervisor marked not-ready.
+        """
+        if self.engine is None:
+            self.start()
+        self._stats["requests"] += 1
+        try:
+            return self.engine.infer(x)
+        except Exception:
+            self._stats["errors"] += 1
+            self._ready = False
+            self.restart()  # raises when the budget is exhausted
+            try:
+                return self.engine.infer(x)
+            except Exception:
+                self._stats["errors"] += 1
+                self._ready = False
+                raise
+
+    def health_check(self) -> bool:
+        """Probe the engine with a zero batch; update + return readiness."""
+        if self.engine is None:
+            return False
+        try:
+            probe = self.engine._example(self.engine.buckets[0])
+            self.engine.infer(probe)
+            self._ready = True
+        except Exception:
+            self._ready = False
+        return self._ready
+
+    # --- introspection ---
+    @property
+    def ready(self) -> bool:
+        return self._ready and self.engine is not None
+
+    def stats(self) -> dict:
+        s = dict(self._stats)
+        s["ready"] = self.ready
+        s["error_rate"] = s["errors"] / max(s["requests"], 1)
+        return s

@@ -1,0 +1,24 @@
+"""Test-support package: fault injectors for resilience testing.
+
+Importable from production benchmarks as well as the test suite (it ships
+in ``src`` so ``benchmarks/bench_resilience.py`` and operators' chaos
+drills can use the same injectors the tests do), but nothing in the
+serving or training hot paths imports it.
+"""
+from repro.testing.faults import (
+    FlakyEngine,
+    SlowEngine,
+    corrupt_chunk,
+    flip_crc,
+    perturb_frozen,
+    poison_batches,
+)
+
+__all__ = [
+    "FlakyEngine",
+    "SlowEngine",
+    "corrupt_chunk",
+    "flip_crc",
+    "perturb_frozen",
+    "poison_batches",
+]

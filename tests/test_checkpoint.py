@@ -96,6 +96,17 @@ class TestDurability:
         with pytest.raises(IOError):
             ckpt.restore(tmp_path, 1, s, verify=True)
 
+    def test_corruption_detected_by_default(self, tmp_path):
+        """restore() verifies checksums unless explicitly opted out."""
+        s = _state()
+        ckpt.save(tmp_path, 1, s)
+        f = sorted((tmp_path / "step_00000001").glob("*.npy"))[0]
+        data = bytearray(f.read_bytes())
+        data[-4] ^= 0xFF
+        f.write_bytes(bytes(data))
+        with pytest.raises(IOError):
+            ckpt.restore(tmp_path, 1, s)  # no verify kwarg: default on
+
     def test_structure_mismatch_raises(self, tmp_path):
         s = _state()
         ckpt.save(tmp_path, 1, s)
@@ -121,3 +132,16 @@ class TestAsync:
         saver.wait()
         r = ckpt.restore(tmp_path, 0, s)
         np.testing.assert_array_equal(np.asarray(r["w"]), np.ones(4))
+
+    def test_async_worker_error_reraised(self, tmp_path):
+        """A failed background commit surfaces on the next save()/wait(),
+        never silently — callers must not believe a checkpoint exists."""
+        blocker = tmp_path / "blocker"
+        blocker.write_text("a file where the ckpt dir should go")
+        saver = ckpt.AsyncCheckpointer(blocker / "ck")
+        s = {"w": jnp.ones((4,))}
+        saver.save(0, s)  # worker fails: parent path is a file
+        with pytest.raises(OSError):
+            saver.save(1, s)
+        # the error is consumed once; the saver is usable for a postmortem
+        saver.wait()

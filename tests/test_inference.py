@@ -168,24 +168,45 @@ class TestBucketPadding:
         np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-7)
         assert eng.stats["requests"] == 5
 
-    def test_micro_batcher_survives_malformed_request(self):
-        """A bad group fails its futures; the worker keeps serving."""
+    def test_micro_batcher_rejects_malformed_at_submit(self):
+        """Validation fails bad requests at the door, before batching."""
         model, params = _model(name="mbx")
         dep = freeze(model, params)
         eng = InferenceEngine(dep, buckets=(2,))
-        mb = MicroBatcher(eng, max_wait_ms=200.0)
-        # two mismatched shapes land in one group: np.stack raises — the
-        # exception must fail both futures, not kill the worker thread
-        bad1 = mb.submit(np.zeros((28, 28), np.float32))
-        bad2 = mb.submit(np.zeros((14, 14), np.float32))
-        with pytest.raises(Exception):
-            bad1.result(timeout=60)
-        with pytest.raises(Exception):
-            bad2.result(timeout=60)
-        good = mb.submit(_digits(1)[0])  # dispatcher must still be alive
+        mb = MicroBatcher(eng, max_wait_ms=50.0)
+        with pytest.raises(ValueError):
+            mb.submit(np.zeros((14, 14), np.float32))  # wrong image shape
+        with pytest.raises(TypeError):
+            mb.submit(np.array([["a"] * 28] * 28))  # non-numeric dtype
+        good = mb.submit(_digits(1)[0])  # rejects never reach the worker
         out = good.result(timeout=60)
         mb.close()
         assert out.shape == (model.cfg.num_classes,)
+        assert mb.stats["submitted"] == 1 and mb.stats["failed"] == 0
+
+    def test_micro_batcher_bisects_poisoned_group(self):
+        """With validation off, a poison request that breaks the whole
+        group fails only its own future; neighbors still get results."""
+        model, params = _model(name="mbp")
+        dep = freeze(model, params)
+        eng = InferenceEngine(dep, buckets=(4,))
+        mb = MicroBatcher(eng, max_wait_ms=150.0, validate=False)
+        x = _digits(2, seed=8)
+        # a 0-d scalar can't stack with images AND fails when served alone
+        good1 = mb.submit(x[0])
+        poison = mb.submit(np.float32(0.5))
+        good2 = mb.submit(x[1])
+        with pytest.raises(Exception):
+            poison.result(timeout=60)
+        ref = np.asarray(
+            jax.jit(lambda p, xx: model.apply(p, xx))(params, x)
+        )
+        np.testing.assert_allclose(good1.result(timeout=60), ref[0],
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(good2.result(timeout=60), ref[1],
+                                   rtol=1e-5, atol=1e-7)
+        mb.close()
+        assert mb.stats["failed"] == 1 and mb.stats["served"] == 2
 
     def test_micro_batcher_deadline_flush(self):
         """Fewer requests than the largest bucket still get served."""

@@ -29,6 +29,23 @@ def _pick(meta: dict, *keys) -> dict:
     return out
 
 
+def _resilience_headline(meta: dict) -> str:
+    """Not a speedup suite: headline the resilience numbers directly."""
+    s = meta.get("summary", {})
+    parts = []
+    cold = s.get("cold_start", {}).get("load_warm_ms")
+    if isinstance(cold, (int, float)):
+        parts.append(f"cold_start {cold:g}ms")
+    shed = s.get("overload", {}).get("shed_rate")
+    if isinstance(shed, (int, float)):
+        parts.append(f"shed_rate {shed:g}")
+    noise = s.get("phase_noise", {})
+    clean, worst = noise.get("clean"), noise.get("1.0")
+    if isinstance(clean, (int, float)) and isinstance(worst, (int, float)):
+        parts.append(f"acc {clean:g}->{worst:g} @ sigma 1.0")
+    return ", ".join(parts)
+
+
 # suite -> (PR, headline metric extractor, description)
 HEADLINES = {
     "propagation_plan": (
@@ -46,6 +63,9 @@ HEADLINES = {
     "inference_throughput": (
         "5", lambda m: _fmt_map(_pick(m, "steady_b32"), "x"),
         "frozen bucketed serving vs per-request apply (batch 32)"),
+    "resilience": (
+        "7", _resilience_headline,
+        "overload shedding, artifact cold-start, phase-noise robustness"),
 }
 
 
