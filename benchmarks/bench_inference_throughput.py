@@ -22,6 +22,9 @@ dispatch amortization + batched FFT, the big win from the codesign fold):
   (response_gamma=1.2) — the LightRidge deployment story; the codesign
   fold dominates (the acceptance >= 5x cell, in practice ~100x+).
 - depth sweep (4/8/16) and the RGB / segmentation families.
+- ``plane_dtype``: quantized frozen planes (f32 / bf16 / int8) per model
+  family — serving req/s and max output delta vs the f32 engine (bf16
+  gated at 5e-2; int8 measured and reported).
 - ``micro_batcher``: end-to-end dispatcher (queue + deadline) req/s.
 - ``multi_device``: subprocess on a forced 4-device host platform —
   dp=4 engine vs single-device engine outputs (rtol <= 1e-5) and req/s
@@ -150,6 +153,66 @@ def _bench_family(label, cfg, rows, buckets=(1, 8, 32), n_reqs=64,
             "engine_first_req_s": round(engine_first_s, 4)}
 
 
+def _bench_plane_dtypes(rows) -> dict:
+    """Quantized frozen planes: serving accuracy delta + req/s per dtype.
+
+    The f32 path is the bit-identity baseline (``plane_dtype="float32"``
+    is the default ``freeze`` — its identity against the training-path
+    forward is pinned by every ``_bench_family`` cell above).  bf16 must
+    stay within the documented 5e-2 output tolerance; int8 is measured
+    and reported, not gated.
+    """
+    mk = lambda name, **kw: DONNConfig(
+        name=name, distance=0.05, det_size=8, **kw
+    )
+    families = [
+        ("classify", mk("pd-cls", n=64, depth=8, codesign="qat",
+                        response_gamma=1.2), (28, 28)),
+        ("rgb", mk("pd-rgb", n=64, depth=4, channels=3, codesign="qat",
+                   response_gamma=1.2), (3, 28, 28)),
+        ("segmentation", mk("pd-seg", n=64, depth=4, segmentation=True,
+                            skip_from=0, layer_norm=True, codesign="qat",
+                            response_gamma=1.2), (28, 28)),
+    ]
+    out = {}
+    for label, cfg, x_shape in families:
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        reqs = _requests(32, x_shape, seed=4)
+        ref = None
+        fam = {}
+        for dtype in ("float32", "bfloat16", "int8"):
+            engine = InferenceEngine(
+                freeze(model, params, plane_dtype=dtype), buckets=(32,)
+            )
+            engine.warmup()
+            got = engine.infer(reqs)
+            if dtype == "float32":
+                ref = got
+            dt = min(_engine_loop(engine, reqs, 32) for _ in range(2))
+            rps = reqs.shape[0] / dt
+            delta = float(np.max(np.abs(got - ref))
+                          / max(np.max(np.abs(ref)), 1e-12))
+            derived = f"req_per_sec={rps:.1f},max_rel_delta={delta:.2e}"
+            if not cfg.segmentation:
+                match = float(np.mean(
+                    np.argmax(got, -1) == np.argmax(ref, -1)
+                ))
+                derived += f",argmax_match={match:.2f}"
+            name = f"infer/plane_dtype/{label}/{dtype}"
+            row(name, dt / reqs.shape[0] * 1e6, derived)
+            rows.append({"name": name, "us": dt / reqs.shape[0] * 1e6,
+                         "derived": derived})
+            if dtype == "bfloat16" and delta > 5e-2:
+                raise AssertionError(
+                    f"{label}: bf16 plane delta {delta:.2e} > 5e-2"
+                )
+            fam[dtype] = {"req_per_sec": round(rps, 1),
+                          "max_rel_delta": delta}
+        out[label] = fam
+    return out
+
+
 def _bench_micro_batcher(rows) -> dict:
     """End-to-end dispatcher: single-image submits, deadline batching."""
     cfg = DONNConfig(name="inf-mb", n=64, depth=8, distance=0.05, det_size=8,
@@ -272,6 +335,7 @@ def main() -> None:
             mk("inf-seg", n=64, depth=4, segmentation=True, skip_from=0,
                layer_norm=True, codesign="qat", response_gamma=1.2),
             rows, buckets=(8, 32), n_reqs=32),
+        "plane_dtype": _bench_plane_dtypes(rows),
         "micro_batcher": _bench_micro_batcher(rows),
         "multi_device": _bench_multi_device(rows),
     }

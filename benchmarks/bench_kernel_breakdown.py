@@ -2,18 +2,32 @@
 
 LightRidge path: jit'd batched complex64 ops (+ the fused Pallas
 phase-modulation kernel for ComplexMM).  Baseline path: per-sample eager
-numpy complex128 (the LightPipes-style limitations)."""
+numpy complex128 (the LightPipes-style limitations).
+
+Rows print in the standard CSV schema and persist to
+``artifacts/bench/BENCH_kernel_breakdown.json`` (tier-1: the CI --check
+gate requires this artifact fresh in every checked invocation).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, time_host_fn
+from benchmarks.common import row, time_fn, time_host_fn, write_bench_json
 from repro.kernels import ops as kops
+
+INTERP_NOTE = "(interpret-mode-on-CPU;wall-clock-meaningful-on-TPU-only)"
+
+
+def _emit(rows: list, name: str, us: float, derived: str):
+    row(name, us, derived)
+    rows.append({"name": name, "us": us, "derived": derived})
 
 
 def main():
+    rows: list = []
+    speeds = {}
     n, batch = 256, 8
     r = np.random.default_rng(0)
     u = (r.normal(size=(batch, n, n)) + 1j * r.normal(size=(batch, n, n)))
@@ -28,8 +42,9 @@ def main():
     us_b = time_host_fn(
         lambda: np.stack([np.fft.fft2(u[i]) for i in range(batch)])
     )
-    row("fig9/fft2/lightridge", us, f"speedup={us_b / us:.1f}x")
-    row("fig9/fft2/baseline", us_b, "per-sample numpy c128")
+    _emit(rows, "fig9/fft2/lightridge", us, f"speedup={us_b / us:.1f}x")
+    _emit(rows, "fig9/fft2/baseline", us_b, "per-sample numpy c128")
+    speeds["fft2"] = round(us_b / us, 2)
 
     # iFFT2
     fi_ours = jax.jit(jnp.fft.ifft2)
@@ -37,8 +52,9 @@ def main():
     us_b = time_host_fn(
         lambda: np.stack([np.fft.ifft2(u[i]) for i in range(batch)])
     )
-    row("fig9/ifft2/lightridge", us, f"speedup={us_b / us:.1f}x")
-    row("fig9/ifft2/baseline", us_b, "per-sample numpy c128")
+    _emit(rows, "fig9/ifft2/lightridge", us, f"speedup={us_b / us:.1f}x")
+    _emit(rows, "fig9/ifft2/baseline", us_b, "per-sample numpy c128")
+    speeds["ifft2"] = round(us_b / us, 2)
 
     # ComplexMM (phase modulation): fused Pallas kernel vs eager loop
     ur, ui = jnp.real(uj), jnp.imag(uj)
@@ -48,12 +64,14 @@ def main():
         lambda: np.stack([u[i] * np.exp(1j * phi.astype(np.complex128))
                           for i in range(batch)])
     )
-    row("fig9/complex_mm/lightridge_pallas_interpret", us,
-        f"speedup={us_b / us:.1f}x(interpret-mode-on-CPU;wall-clock-meaningful-on-TPU-only)")
+    _emit(rows, "fig9/complex_mm/lightridge_pallas_interpret", us,
+          f"speedup={us_b / us:.1f}x{INTERP_NOTE}")
     cm_jnp = jax.jit(lambda v, h: v * h)
     us2 = time_fn(cm_jnp, uj, hj)
-    row("fig9/complex_mm/lightridge_jnp", us2, f"speedup={us_b / us2:.1f}x")
-    row("fig9/complex_mm/baseline", us_b, "per-sample numpy c128")
+    _emit(rows, "fig9/complex_mm/lightridge_jnp", us2,
+          f"speedup={us_b / us2:.1f}x")
+    _emit(rows, "fig9/complex_mm/baseline", us_b, "per-sample numpy c128")
+    speeds["complex_mm"] = round(us_b / us2, 2)
 
     # fused phase+TF elementwise op (the scan-body site of the propagation
     # engine): cos/sin rotation + amplitude complex-multiply in one pass
@@ -65,9 +83,34 @@ def main():
     us3_b = time_host_fn(
         lambda: np.stack([u[i] * h_np for i in range(batch)])
     )
-    row("fig9/phase_tf/lightridge_pallas_interpret", us3,
-        f"speedup={us3_b / us3:.1f}x(interpret-mode-on-CPU;wall-clock-meaningful-on-TPU-only)")
-    row("fig9/phase_tf/baseline", us3_b, "per-sample numpy c128 TF multiply")
+    _emit(rows, "fig9/phase_tf/lightridge_pallas_interpret", us3,
+          f"speedup={us3_b / us3:.1f}x{INTERP_NOTE}")
+    _emit(rows, "fig9/phase_tf/baseline", us3_b,
+          "per-sample numpy c128 TF multiply")
+
+    # fused spectral hop (TF multiply + inverse transform + modulation
+    # collapsed into two conj-kernel passes between FFTs) vs the unfused
+    # jnp chain the propagation plan runs with use_pallas=False
+    theta_m = jnp.asarray(r.uniform(0, 6.28, (n, n)).astype(np.float32))
+    amp_m = jnp.ones((n, n), jnp.float32)
+    fused = jax.jit(lambda a, b, th, ah, tm, am:
+                    kops.fused_spectral_hop(a, b, th, ah, tm, am))
+    us4 = time_fn(fused, ur, ui, theta_h, amp_h, theta_m, amp_m)
+    unfused = jax.jit(lambda x, th, ah, tm, am:
+                      kops.fused_spectral_hop_ref(x, th, ah, tm, am))
+    us4_b = time_fn(unfused, uj, theta_h, amp_h, theta_m, amp_m)
+    _emit(rows, "fig9/fused_hop/lightridge_pallas_interpret", us4,
+          f"speedup={us4_b / us4:.2f}x{INTERP_NOTE}")
+    _emit(rows, "fig9/fused_hop/lightridge_jnp", us4_b,
+          "unfused jnp hop (fft2,tf-mul,ifft2,mod-mul)")
+    speeds["fused_hop_vs_jnp"] = round(us4_b / us4, 2)
+
+    write_bench_json(
+        "kernel_breakdown", rows,
+        meta={"backend": jax.default_backend(), "n": n, "batch": batch,
+              "pallas_interpret": jax.default_backend() != "tpu",
+              "speedups": speeds},
+    )
 
 
 if __name__ == "__main__":

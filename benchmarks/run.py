@@ -9,7 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
   train_throughput -> bench_train_throughput (chunked training drivers)
   inference_throughput -> bench_inference_throughput (deployment engine)
   resilience  -> bench_resilience (overload shed, cold-start, noise curves)
-  (env)       -> bench_roofline (reads the dry-run artifacts)
+  roofline    -> bench_roofline (measured achieved-vs-peak per tier-1 cell)
 
 Usage: ``python benchmarks/run.py [--check] [filter ...]`` — any number
 of substring filters selects the suites to run (all when none given).
@@ -33,7 +33,8 @@ import traceback
 
 # suites whose cells gate CI: they must be fresh in the uploaded summary
 TIER1_SUITES = ("propagation_plan", "dse_batched", "hetero",
-                "train_throughput", "inference_throughput", "resilience")
+                "train_throughput", "inference_throughput", "resilience",
+                "kernel_breakdown", "roofline")
 
 
 def stale_tier1(summary: dict) -> list:

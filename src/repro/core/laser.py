@@ -73,6 +73,19 @@ def data_to_cplex(x: jax.Array, grid_n: Optional[int] = None) -> jax.Array:
     return x.astype(jnp.complex64)
 
 
+def data_to_real(x: jax.Array, grid_n: Optional[int] = None) -> jax.Array:
+    """``data_to_cplex`` without the complex cast (imag is exactly zero).
+
+    The real-to-complex first-hop serving path (``DeployedDONN`` with
+    ``rfft_first``) keeps the encoded field real so hop 0 can run as
+    half-spectrum rFFTs; same resize/embed semantics as ``data_to_cplex``.
+    """
+    x = x.astype(jnp.float32)
+    if grid_n is not None and x.shape[-1] != grid_n:
+        x = resize_to_grid(x, grid_n)
+    return x
+
+
 def resize_to_grid(x: jax.Array, n: int, mode: str = "upsample") -> jax.Array:
     """Nearest-neighbour upsample (or center-embed) (..., h, w) -> (..., n, n)."""
     h, w = x.shape[-2], x.shape[-1]

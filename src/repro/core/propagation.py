@@ -204,6 +204,67 @@ def cached_executable(static_key: tuple, fn: Callable, *args,
 
 
 # --------------------------------------------------------------------------
+# Frozen-plane storage dtypes (deployment serving path)
+# --------------------------------------------------------------------------
+PLANE_DTYPES = ("float32", "bfloat16", "int8")
+
+
+def quantize_frozen_planes(pair, plane_dtype: str = "float32") -> tuple:
+    """Reduce a frozen modulation plane pair to its storage dtype.
+
+    The ``tf_dtype`` idea generalized to the serving path: planes are
+    *stored* small and every consumer accumulates in f32
+    (``dequant_frozen_layer`` inside the scan body).
+
+    - ``"float32"``  -> the pair unchanged (bit-identical fast path);
+    - ``"bfloat16"`` -> the same 2-tuple cast to bf16 storage;
+    - ``"int8"``     -> a 4-tuple ``(qa, qb, sa, sb)``: symmetric per-layer
+      linear quantization ``q = round(x / s)`` with f32 scales
+      ``s = max|x| / 127`` kept per layer (shape ``(L, 1, 1[, 1])``), so
+      each modulation plane dequantizes independently.
+    """
+    if plane_dtype not in PLANE_DTYPES:
+        raise ValueError(
+            f"unknown plane_dtype {plane_dtype!r} (expected one of "
+            f"{PLANE_DTYPES})"
+        )
+    if plane_dtype == "float32":
+        return tuple(pair)
+    if plane_dtype == "bfloat16":
+        return tuple(jnp.asarray(p).astype(jnp.bfloat16) for p in pair)
+    qs, ss = [], []
+    for p in pair:
+        p = jnp.asarray(p, jnp.float32)
+        red = tuple(range(1, p.ndim))
+        s = jnp.max(jnp.abs(p), axis=red, keepdims=True) / 127.0
+        s = jnp.maximum(s, jnp.float32(1e-12))
+        qs.append(jnp.round(p / s).astype(jnp.int8))
+        ss.append(s)
+    return (qs[0], qs[1], ss[0], ss[1])
+
+
+def dequant_frozen_layer(leaves) -> tuple:
+    """One layer's frozen-plane leaves -> f32 ``(a, b)`` (f32 accumulation).
+
+    ``leaves`` is one scan step's slice of the frozen tuple: ``(a, b)``
+    for float32/bfloat16 storage, ``(qa, qb, sa, sb)`` for int8.
+    """
+    if len(leaves) == 2:
+        a, b = leaves
+        return a.astype(jnp.float32), b.astype(jnp.float32)
+    qa, qb, sa, sb = leaves
+    return qa.astype(jnp.float32) * sa, qb.astype(jnp.float32) * sb
+
+
+def frozen_plane_dtype(frozen) -> str:
+    """Storage dtype of a frozen pair/4-tuple (inverse of quantization)."""
+    frozen = tuple(frozen)
+    if len(frozen) == 4:
+        return "int8"
+    return "bfloat16" if frozen[0].dtype == jnp.bfloat16 else "float32"
+
+
+# --------------------------------------------------------------------------
 # Scan tuning
 # --------------------------------------------------------------------------
 def default_scan_unroll(depth: int) -> int:
@@ -290,6 +351,12 @@ class PropagationPlan:
         # split-plane pair consumed by the scan body: polar for the fused
         # Pallas kernel, cartesian for the jnp path
         self._plane_keys = ("theta", "amp") if use_pallas else ("hr", "hi")
+        # whole-hop fusion (kernels.ops.fused_spectral_hop): TF multiply +
+        # modulation as one VMEM pass per FFT side.  Needs the polar plane
+        # convention and the plain fft2/ifft2 hop structure — fraunhofer
+        # (single shifted FFT) and padded hops keep the two-site path.
+        self._fuse = bool(use_pallas) and method != df.FRAUNHOFER \
+            and not self.pad
         planes = [
             transfer_planes(grid, z, wavelength, method, band_limit, self.pad)
             for z in self.gaps
@@ -343,6 +410,32 @@ class PropagationPlan:
         ur, ui = kops.phase_tf_apply(u.real, u.imag, phi, amp)
         return jax.lax.complex(ur, ui)
 
+    def _fused_layer(self, u: jax.Array, tf_pair, mod=None,
+                     phi=None) -> jax.Array:
+        """One whole modulated layer as the fused spectral-hop kernel.
+
+        ``M . ifft2(Hc . fft2(u))`` with both elementwise sites (TF
+        multiply, modulation) fused into one VMEM pass per FFT side
+        (``kernels.ops.fused_spectral_hop``).  ``tf_pair`` is the polar
+        ``(arg H, |H|)`` pair (possibly bf16 storage — upcast here, f32
+        accumulation); the modulation is either a trainable phase ``phi``
+        (amp = gamma, the custom VJP carries d phi) or a frozen polar
+        ``mod`` pair from ``frozen_modulation``.  TF planes are static
+        geometry: their cotangents are zero, exactly like the ``amp``
+        argument of ``phase_tf_apply``.
+        """
+        from repro.kernels import ops as kops
+
+        th_h, amp_h = (p.astype(jnp.float32) for p in tf_pair)
+        if phi is not None:
+            th_m = phi
+            amp_m = jnp.full(phi.shape, self.gamma, jnp.float32)
+        else:
+            th_m, amp_m = mod
+        ur, ui = kops.fused_spectral_hop(u.real, u.imag, th_h, amp_h,
+                                         th_m, amp_m)
+        return jax.lax.complex(ur, ui)
+
     def _modulate_frozen(self, u: jax.Array, pair) -> jax.Array:
         """Modulate by one layer's *precomputed* modulation plane pair.
 
@@ -361,7 +454,8 @@ class PropagationPlan:
         ur, ui = kops.phase_tf_apply(u.real, u.imag, a, b)  # (theta, amp)
         return jax.lax.complex(ur, ui)
 
-    def frozen_modulation(self, phis: jax.Array) -> tuple:
+    def frozen_modulation(self, phis: jax.Array,
+                          plane_dtype: str = "float32") -> tuple:
         """Deploy-time fold: device response + ``gamma*exp(j phi)`` once.
 
         ``phis`` is the trained (L, ...) phase stack.  The codesign device
@@ -369,12 +463,18 @@ class PropagationPlan:
         statically-known state the fabricated hardware holds) and the
         modulation ``gamma * exp(j phi_eff)`` is precomputed into a split
         plane pair in the plan's kernel convention: polar ``(theta, amp)``
-        consumed directly by the fused ``phase_tf_apply`` kernel under
-        ``use_pallas``, cartesian ``(mr, mi)`` for the jnp path.  Feed the
-        result to ``forward``/``apply`` via ``frozen=`` — the per-request
-        hot path then skips phase-stack construction, quantization and
-        codesign rng entirely (bit-identical to the training-path forward
-        at eval, tests/test_inference.py).
+        consumed directly by the fused Pallas kernels under ``use_pallas``,
+        cartesian ``(mr, mi)`` for the jnp path.  Feed the result to
+        ``forward``/``apply`` via ``frozen=`` — the per-request hot path
+        then skips phase-stack construction, quantization and codesign rng
+        entirely (bit-identical to the training-path forward at eval,
+        tests/test_inference.py).
+
+        ``plane_dtype`` selects the *storage* precision of the folded
+        planes (``quantize_frozen_planes``): ``"float32"`` is bit-identical
+        to the historical pair, ``"bfloat16"``/``"int8"`` shrink the
+        serving artifact 2x/4x with f32 accumulation in the scan body
+        (accuracy deltas measured in BENCH_inference_throughput).
         """
 
         def fold(p):
@@ -385,7 +485,7 @@ class PropagationPlan:
             return m.real, m.imag
 
         a, b = jax.jit(fold)(jnp.asarray(phis))
-        return a, b
+        return quantize_frozen_planes((a, b), plane_dtype)
 
     def _hop(self, u: jax.Array, pair, spectral=None) -> jax.Array:
         """One free-space gap with a prepared TF plane pair.
@@ -487,16 +587,24 @@ class PropagationPlan:
         if pre is not None:
             u = pre(u)
         a, b = self._tf_pair() if tfs is None else tfs
+        # whole-hop fusion applies whenever the body is the plain
+        # fft2 -> multiply -> ifft2 -> modulate chain on local spectra
+        fuse = self._fuse and spectral is None
         if frozen is not None:
-            fa, fb = frozen
-            xs = (a[start:stop], b[start:stop], fa[start:stop],
-                  fb[start:stop])
+            frozen = tuple(frozen)
+            xs = (a[start:stop], b[start:stop]) + tuple(
+                f[start:stop] for f in frozen
+            )
 
             def body(carry, layer):
-                a_l, b_l, fa_l, fb_l = layer
-                carry = self._modulate_frozen(
-                    self._hop(carry, (a_l, b_l), spectral), (fa_l, fb_l)
-                )
+                a_l, b_l = layer[0], layer[1]
+                mod = dequant_frozen_layer(layer[2:])
+                if fuse:
+                    carry = self._fused_layer(carry, (a_l, b_l), mod=mod)
+                else:
+                    carry = self._modulate_frozen(
+                        self._hop(carry, (a_l, b_l), spectral), mod
+                    )
                 return carry, None
 
             if self.remat == "layer":
@@ -516,9 +624,12 @@ class PropagationPlan:
 
             def body(carry, layer):
                 a_l, b_l, phi = layer
-                carry = self._modulate(
-                    self._hop(carry, (a_l, b_l), spectral), phi
-                )
+                if fuse:
+                    carry = self._fused_layer(carry, (a_l, b_l), phi=phi)
+                else:
+                    carry = self._modulate(
+                        self._hop(carry, (a_l, b_l), spectral), phi
+                    )
                 return carry, None
         else:
             xs = (a[start:stop], b[start:stop], phi_eff[start:stop],
@@ -526,9 +637,12 @@ class PropagationPlan:
 
             def body(carry, layer):
                 a_l, b_l, phi, m = layer
-                new = self._modulate(
-                    self._hop(carry, (a_l, b_l), spectral), phi
-                )
+                if fuse:
+                    new = self._fused_layer(carry, (a_l, b_l), phi=phi)
+                else:
+                    new = self._modulate(
+                        self._hop(carry, (a_l, b_l), spectral), phi
+                    )
                 carry = jnp.where(m, new, carry)
                 return carry, None
 
@@ -554,6 +668,66 @@ class PropagationPlan:
             )
         a, b = self._tf_pair() if tfs is None else tfs
         return self._hop(u, (a[self.depth], b[self.depth]), spectral)
+
+    # --- real-to-complex first hop -------------------------------------
+    def rfft_first_supported(self) -> bool:
+        """Whether the half-spectrum first hop applies to this plan.
+
+        Needs the plain fft2/ifft2 hop structure (no fraunhofer, no pad)
+        and an even transfer function ``H(-f) = H(f)`` — true for every
+        angular-spectrum TF here since they are functions of ``fx^2 +
+        fy^2`` on the symmetric ``fftfreq`` grid (verified numerically at
+        first use; ``first_layer_real`` raises otherwise).
+        """
+        return self.method != df.FRAUNHOFER and not self.pad
+
+    def _rfft_half(self) -> tuple:
+        """Cached half-spectrum cartesian TF planes for gap 0.
+
+        A real input field has a conjugate-symmetric spectrum, and the TF
+        is even, so hop 0 needs only the ``(N, N//2 + 1)`` rfft2 half
+        grid: ``ifft2(U.H) = irfft2(U_half.Hr_half) + j irfft2(U_half.
+        Hi_half)`` (each product is conjugate-symmetric because Hr/Hi are
+        real and even).  1 rfft2 + 2 irfft2 ~ 1.5 full complex FFTs for
+        the most common entry hop (intensity/amplitude encoded data).
+        """
+        cached = self._jax.get("_rhalf")
+        if cached is not None:
+            return cached
+        if not self.rfft_first_supported():
+            raise ValueError(
+                "rfft first hop needs an unpadded non-fraunhofer plan"
+            )
+        p = transfer_planes(self.grid, self.gaps[0], self.wavelength,
+                            self.method, self.band_limit, self.pad)
+        half = self.grid.n // 2 + 1
+        for h in (p["hr"], p["hi"]):
+            folded = np.roll(np.flip(h, (-2, -1)), (1, 1), (-2, -1))
+            if not np.allclose(h, folded, atol=1e-5):
+                raise ValueError(
+                    "transfer function is not even in frequency; the "
+                    "half-spectrum first hop does not apply"
+                )
+        pair = (jnp.asarray(p["hr"][..., :half]),
+                jnp.asarray(p["hi"][..., :half]))
+        self._jax["_rhalf"] = pair
+        return pair
+
+    def first_layer_real(self, x: jax.Array, frozen) -> jax.Array:
+        """Layer 0 (hop + frozen modulation) for a *real* input field.
+
+        ``x`` is the real field amplitude (imag exactly zero — intensity/
+        amplitude-encoded data through a real source); ``frozen`` the full
+        frozen tuple from ``frozen_modulation``.  Continue with
+        ``forward(None, u, start=1, frozen=frozen)``.
+        """
+        hr, hi = self._rfft_half()
+        s = jnp.fft.rfft2(x)
+        n = (self.grid.n, self.grid.n)
+        u = jax.lax.complex(jnp.fft.irfft2(s * hr, s=n),
+                            jnp.fft.irfft2(s * hi, s=n))
+        mod = dequant_frozen_layer(tuple(f[0] for f in tuple(frozen)))
+        return self._modulate_frozen(u, mod)
 
     def apply(self, phis: jax.Array, u: jax.Array, rng=None,
               tfs=None, mask=None, spectral=None, frozen=None) -> jax.Array:
@@ -706,15 +880,18 @@ class SegmentedPlan:
             jnp.stack(phases[lo:hi]) for lo, hi in self.slices
         )
 
-    def frozen_modulation(self, phis) -> tuple:
+    def frozen_modulation(self, phis, plane_dtype: str = "float32") -> tuple:
         """Per-segment deploy-time fold (see ``PropagationPlan``'s).
 
         ``phis`` is the per-segment pytree from ``stack_phases``; returns
-        one modulation plane pair per segment, in segment order — the
+        one modulation plane tuple per segment, in segment order — the
         ``frozen=`` input of this plan's ``forward``/``apply``.
+        ``plane_dtype`` applies to every segment (int8 scales stay
+        per-layer within each segment).
         """
         return tuple(
-            seg.frozen_modulation(p) for seg, p in zip(self.segments, phis)
+            seg.frozen_modulation(p, plane_dtype)
+            for seg, p in zip(self.segments, phis)
         )
 
     # --- forward ---

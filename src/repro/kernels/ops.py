@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import complex_mul as _cm
 from repro.kernels import intensity_readout as _ir
 from repro.kernels import rope as _rp
+from repro.kernels import spectral_hop as _sh
 from repro.kernels import ref
 
 
@@ -247,6 +248,125 @@ def phase_tf_apply(xr, xi, theta, amp):
 
 
 # --------------------------------------------------------------------------
+# fused_spectral_hop: one full propagation hop + modulation,
+#   out = M . ifft2(Hc . fft2(x)),   Hc = amp_h e^{j th_h}, M = amp_m e^{j th_m}
+# as fft2 -> conj-kernel(-th_h) -> fft2 -> conj-kernel(+th_m, 1/(H*W)) via
+# ifft2(y) = conj(fft2(conj(y)))/(H*W).  Everything between/after the two
+# forward FFTs is a single fused VMEM pass (see kernels/spectral_hop.py).
+# VJP (the hop is C-linear in x; adjoint convention matches phase_tf_apply,
+# d x = A^H g):
+#   d x    = ifft2( conj(Hc) . fft2( conj(M) . g ) )   [reuses phase_tf kernel]
+#   d th_m = sum_nb (gi * out_r - gr * out_i)          [d out/d th_m = j out]
+#   d th_h = d amp_h = d amp_m = 0   (TF/band-limit/gamma: static geometry)
+# --------------------------------------------------------------------------
+def _conj_ps_raw(xr, xi, theta, amp, nb, sign, scale):
+    PB, H, W = xr.shape
+    bh, bw = _pick_blocks(H, W)
+    Hp, Wp = _ceil_to(H, bh), _ceil_to(W, bw)
+    out_r, out_i = _sh.conj_phase_scale_pallas(
+        _pad2d(xr, Hp, Wp), _pad2d(xi, Hp, Wp),
+        _pad2d(theta, Hp, Wp), _pad2d(amp, Hp, Wp),
+        sign=sign, scale=scale, nb=nb, bh=bh, bw=bw, interpret=_interpret(),
+    )
+    return out_r[..., :H, :W], out_i[..., :H, :W]
+
+
+def _fused_hop_raw(xr, xi, th_h, amp_h, th_m, amp_m, nb):
+    H, W = xr.shape[-2:]
+    s = jnp.fft.fft2(jax.lax.complex(xr, xi))
+    tr, ti = _conj_ps_raw(s.real, s.imag, th_h, amp_h, nb, -1.0, 1.0)
+    w = jnp.fft.fft2(jax.lax.complex(tr, ti))
+    return _conj_ps_raw(w.real, w.imag, th_m, amp_m, nb, 1.0, 1.0 / (H * W))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _fused_hop(xr, xi, th_h, amp_h, th_m, amp_m, nb):
+    return _fused_hop_raw(xr, xi, th_h, amp_h, th_m, amp_m, nb)
+
+
+def _fused_hop_fwd(xr, xi, th_h, amp_h, th_m, amp_m, nb):
+    out = _fused_hop_raw(xr, xi, th_h, amp_h, th_m, amp_m, nb)
+    return out, (th_h, amp_h, th_m, amp_m, out)
+
+
+def _fused_hop_bwd(nb, res, g):
+    th_h, amp_h, th_m, amp_m, (our, oui) = res
+    gr, gi = g
+    # conj(M) . g, back through the spectral hop, conj(Hc) ., inverse FFT
+    vr, vi = _phase_tf_apply_raw(gr, gi, -th_m, amp_m, nb)
+    v = jnp.fft.fft2(jax.lax.complex(vr, vi))
+    wr, wi = _phase_tf_apply_raw(v.real, v.imag, -th_h, amp_h, nb)
+    dx = jnp.fft.ifft2(jax.lax.complex(wr, wi))
+    P, H, W = th_m.shape
+    cot = (gi * our - gr * oui).reshape((P, nb, H, W))
+    dth_m = jnp.sum(cot, axis=1)
+    return (dx.real, dx.imag, jnp.zeros_like(th_h), jnp.zeros_like(amp_h),
+            dth_m, jnp.zeros_like(amp_m))
+
+
+_fused_hop.defvjp(_fused_hop_fwd, _fused_hop_bwd)
+
+
+@jax.jit
+def fused_spectral_hop(xr, xi, theta_h, amp_h, theta_m, amp_m):
+    """One hop + modulation, M . ifft2(Hc . fft2(x)), on split planes.
+
+    x: (..., H, W); the four planes share one shape — (H, W) applied to
+    every field, or a plane stack (*P, H, W) with x: (..., *P, H, W) so
+    plane p transforms the fields in slot p (same stack-axis contract as
+    ``phase_tf_apply``: (C, H, W) multi-channel, (K, ..., H, W) batched
+    DSE candidates).  theta_h/amp_h are the transfer-function phase and
+    magnitude (band-limit folded into amp); theta_m/amp_m the modulation
+    phase and amplitude (gamma / codesign folded into amp_m).
+    """
+    # the TF and modulation planes may have different stack shapes (e.g.
+    # multi-channel: TF (H, W) shared, phases (C, H, W)) — broadcast to one
+    planes = (theta_h, amp_h, theta_m, amp_m)
+    bshape = jnp.broadcast_shapes(*(p.shape for p in planes))
+    planes = tuple(jnp.broadcast_to(p, bshape) for p in planes)
+    pdims = len(bshape) - 2
+    H, W = bshape[-2:]
+    if pdims > 0:
+        pshape = bshape[:-2]
+        if xr.shape[xr.ndim - 2 - pdims: xr.ndim - 2] != pshape:
+            raise ValueError(
+                f"plane axes {pshape} of the TF/modulation planes must "
+                f"match the corresponding axes of x {xr.shape}"
+            )
+        squeeze = xr.ndim == pdims + 2
+        if squeeze:
+            xr, xi = xr[None], xi[None]
+        P = math.prod(pshape)
+        lead = xr.shape[: xr.ndim - pdims - 2]
+        xr3 = jnp.moveaxis(xr.reshape((-1, P, H, W)), 1, 0)
+        xi3 = jnp.moveaxis(xi.reshape((-1, P, H, W)), 1, 0)
+        B = xr3.shape[1]
+        out_r, out_i = _fused_hop(
+            xr3.reshape((P * B, H, W)), xi3.reshape((P * B, H, W)),
+            *(p.reshape((P, H, W)) for p in planes), B,
+        )
+        out_r = jnp.moveaxis(out_r.reshape((P, B, H, W)), 0, 1)
+        out_i = jnp.moveaxis(out_i.reshape((P, B, H, W)), 0, 1)
+        out_r = out_r.reshape(lead + pshape + (H, W))
+        out_i = out_i.reshape(lead + pshape + (H, W))
+    else:
+        squeeze = xr.ndim == 2
+        if squeeze:
+            xr, xi = xr[None], xi[None]
+        lead = xr.shape[:-2]
+        flat_r = xr.reshape((-1, H, W))
+        out_r, out_i = _fused_hop(
+            flat_r, xi.reshape((-1, H, W)),
+            *(p[None] for p in planes), flat_r.shape[0],
+        )
+        out_r = out_r.reshape(lead + (H, W))
+        out_i = out_i.reshape(lead + (H, W))
+    if squeeze:
+        out_r, out_i = out_r[0], out_i[0]
+    return out_r, out_i
+
+
+# --------------------------------------------------------------------------
 # intensity_readout: out[b,c] = sum_hw masks[c] * (ur^2 + ui^2).
 # VJP (masks are non-trainable detector geometry):
 #   d ur = 2 ur * (g @ masks),  d ui = 2 ui * (g @ masks)
@@ -362,6 +482,7 @@ def apply_rope(x, cos, sin):
 complex_mul_ref = ref.complex_mul_ref
 phase_apply_ref = ref.phase_apply_ref
 phase_tf_apply_ref = ref.phase_tf_apply_ref
+fused_spectral_hop_ref = ref.fused_spectral_hop_ref
 intensity_readout_ref = ref.intensity_readout_ref
 rope_ref = ref.rope_ref
 

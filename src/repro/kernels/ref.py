@@ -32,6 +32,20 @@ def phase_tf_apply_ref(xr, xi, theta, amp):
     return xr * c - xi * s, xr * s + xi * c
 
 
+def fused_spectral_hop_ref(x, theta_h, amp_h, theta_m, amp_m):
+    """One propagation hop + modulation: M . ifft2(Hc . fft2(x)).
+
+    x: complex (..., H, W); planes broadcast against x.  Hc = amp_h *
+    exp(j theta_h) is the (band-limited) spectral transfer function, M =
+    amp_m * exp(j theta_m) the modulation plane (gamma/codesign folded
+    into amp_m).  This is the unfused four-op hop the Pallas kernel
+    (`ops.fused_spectral_hop`) collapses to two FFTs + two fused passes.
+    """
+    hc = amp_h * jnp.exp(1j * theta_h.astype(jnp.complex64))
+    m = amp_m * jnp.exp(1j * theta_m.astype(jnp.complex64))
+    return m * jnp.fft.ifft2(hc * jnp.fft.fft2(x))
+
+
 def intensity_readout_ref(ur, ui, masks):
     """|u|^2 pooled per detector region: (B,H,W)x(C,H,W) -> (B,C)."""
     inten = ur * ur + ui * ui

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the fused spectral hop (one VMEM pass per side).
+
+One propagation hop + modulation is ``M . ifft2(H . fft2(u))`` — four XLA
+ops between which split real/imag planes get re-materialized as complex
+temporaries.  Rewriting the inverse transform with the conjugation
+identity ``ifft2(y) = conj(fft2(conj(y))) / (H*W)`` turns the hop into
+
+    s = fft2(u)
+    t = conj(s) * |H| * exp(-j arg H)          # pass 1: TF multiply + conj
+    w = fft2(t)
+    out = conj(w) * (|M| / (H*W)) * exp(+j arg M)   # pass 2: scale + modulate
+
+so *everything between and after the two forward FFTs* is exactly one
+fused elementwise kernel each: ``out = conj(x) * amp * scale * exp(sign *
+j * theta)``.  The conjugations, the iFFT normalization and the
+band-limit/evanescent amplitude all fold into the kernel constants
+instead of surfacing as separate HLO ops.
+
+Block layout matches ``complex_mul.py``: plane-major ``(P*nb, H, W)``
+field slabs against ``(P, H, W)`` plane stacks, W tiled to the 128-lane
+dimension, H to the 8-sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conj_phase_scale_kernel(xr_ref, xi_ref, th_ref, amp_ref, or_ref, oi_ref,
+                             *, sign, scale):
+    # out = conj(x) * amp * scale * exp(sign * j * theta)
+    #     = (xr - j xi) * (c + j s_)   with c = amp*scale*cos, s_ = sign*...
+    xr, xi = xr_ref[...], xi_ref[...]
+    th = th_ref[0]
+    amp = amp_ref[0]
+    c = jnp.cos(th) * amp * scale
+    s_ = jnp.sin(th) * (amp * (sign * scale))
+    or_ref[...] = xr * c + xi * s_
+    oi_ref[...] = xr * s_ - xi * c
+
+
+def conj_phase_scale_pallas(xr, xi, theta, amp, *, sign: float, scale: float,
+                            nb: int, bh: int, bw: int, interpret: bool):
+    """x: (P*nb, H, W) split planes; theta/amp: (P, H, W) real planes.
+
+    Computes ``conj(x) * amp * scale * exp(sign * j * theta)`` in one VMEM
+    pass.  Plane p applies to the contiguous slab ``x[p*nb:(p+1)*nb]``;
+    ``sign``/``scale`` are trace-time constants folded into the cos/sin
+    weights (no extra device ops).
+    """
+    PB, H, W = xr.shape
+    grid = (PB, H // bh, W // bw)
+    x_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
+    p_spec = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b // nb, i, j))
+    out_shape = [
+        jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+        jax.ShapeDtypeStruct(xr.shape, xr.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_conj_phase_scale_kernel, sign=float(sign),
+                          scale=float(scale)),
+        grid=grid,
+        in_specs=[x_spec, x_spec, p_spec, p_spec],
+        out_specs=[x_spec, x_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, theta, amp)

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import diffraction as df
-from repro.core.laser import data_to_cplex
+from repro.core.laser import data_to_cplex, data_to_real
 from repro.data.pipeline import bucket_for, pad_batch
 from repro.runtime.resilience import DeadlineExceededError, OverloadedError
 
@@ -68,7 +68,9 @@ class DeployedDONN:
 
     def __init__(self, cfg, family: str, plan, frozen, source, in_n: int,
                  detector=None, skip_from=None, skip_hop=None,
-                 out_grid=None):
+                 out_grid=None, rfft_first: bool = False):
+        from repro.core import propagation as pp
+
         self.cfg = cfg
         self.family = family  # "cls" | "multi" | "seg"
         self.plan = plan
@@ -80,6 +82,31 @@ class DeployedDONN:
         self.skip_hop = skip_hop
         self.out_grid = out_grid
         self.heterogeneous = cfg.is_heterogeneous()
+        # storage precision of the modulation planes (derived, so restored
+        # artifacts report it without trusting their metadata)
+        self.plane_dtype = pp.frozen_plane_dtype(
+            frozen[0] if self.heterogeneous else frozen
+        )
+        self.rfft_first = bool(rfft_first)
+        if self.rfft_first:
+            if self.heterogeneous:
+                raise ValueError(
+                    "rfft_first covers uniform plans (the segmented first "
+                    "hop is a follow-on)"
+                )
+            if not plan.rfft_first_supported():
+                raise ValueError(
+                    "rfft_first needs an unpadded non-fraunhofer plan"
+                )
+            if plan.depth < 1:
+                raise ValueError("rfft_first needs at least one layer")
+            if not np.allclose(np.asarray(self.source).imag, 0.0):
+                raise ValueError(
+                    "rfft_first needs a real source field (amplitude-"
+                    "encoded inputs keep the entry field real)"
+                )
+            # half-spectrum TF planes build (and evenness-check) eagerly
+            plan._rfft_half()
 
     # --- the deployment forward (bit-identical to model.apply at eval) ---
     def forward(self, x: jax.Array, frozen=None) -> jax.Array:
@@ -91,15 +118,24 @@ class DeployedDONN:
         (same statics, different trained params).
         """
         frozen = self.frozen if frozen is None else frozen
-        u = data_to_cplex(x, self.in_n) * self.source
+        if self.rfft_first:
+            # real-to-complex entry: amplitude-encoded data through a real
+            # source keeps the field real, so layer 0 runs as half-spectrum
+            # rFFTs (plan.first_layer_real); the scan continues at layer 1
+            xr = data_to_real(x, self.in_n) * self.source.real
+            u = self.plan.first_layer_real(xr, frozen)
+            start = 1
+        else:
+            u = data_to_cplex(x, self.in_n) * self.source
+            start = 0
         if self.family == "seg":
             plan = self.plan
             if self.skip_from is None:
-                u = plan.forward(None, u, frozen=frozen)
+                u = plan.forward(None, u, start=start, frozen=frozen)
                 skip_u = None
             else:
-                u = plan.forward(None, u, stop=self.skip_from + 1,
-                                 frozen=frozen)
+                u = plan.forward(None, u, start=start,
+                                 stop=self.skip_from + 1, frozen=frozen)
                 skip_u = u
                 u = plan.forward(None, u, start=self.skip_from + 1,
                                  frozen=frozen)
@@ -109,7 +145,8 @@ class DeployedDONN:
                 sk = df.resample_field(sk, self.skip_hop.grid, self.out_grid)
                 u = (u + sk) / jnp.sqrt(2.0).astype(jnp.complex64)
             return df.intensity(u)  # eval path: no train-time layer norm
-        u = self.plan.apply(None, u, frozen=frozen)
+        u = self.plan.forward(None, u, start=start, frozen=frozen)
+        u = self.plan.propagate_final(u)
         if self.family == "multi":
             from repro.core.models import channel_readout
 
@@ -123,14 +160,18 @@ class DeployedDONN:
         The trained modulation planes enter compiled programs as traced
         inputs, so deployments of the same architecture with different
         params share executables (and can never read each other's baked
-        constants).
+        constants).  ``rfft_first`` changes the program *structure* (the
+        entry hop), so it is part of the identity; plane storage dtypes
+        already differ in the frozen-input avals.
         """
         from repro.core.models import config_static_key
 
-        return ("deployed_donn", self.family, config_static_key(self.cfg))
+        return ("deployed_donn", self.family, config_static_key(self.cfg),
+                self.rfft_first)
 
 
-def deployed_from_model(model, frozen, source=None) -> DeployedDONN:
+def deployed_from_model(model, frozen, source=None,
+                        rfft_first: bool = False) -> DeployedDONN:
     """Assemble a ``DeployedDONN`` around a built model + ready-made planes.
 
     The structural half of ``freeze``: plan, detector, grids and skip
@@ -148,7 +189,7 @@ def deployed_from_model(model, frozen, source=None) -> DeployedDONN:
         return DeployedDONN(
             model.cfg, "multi", cm.plan, frozen,
             cm.source if source is None else source, cm.in_grid.n,
-            detector=cm.detector,
+            detector=cm.detector, rfft_first=rfft_first,
         )
     if isinstance(model, md.SegmentationDONN):
         return DeployedDONN(
@@ -156,23 +197,32 @@ def deployed_from_model(model, frozen, source=None) -> DeployedDONN:
             model.source if source is None else source, model.in_grid.n,
             skip_from=model.skip_from,
             skip_hop=getattr(model, "skip_hop", None), out_grid=model.grid,
+            rfft_first=rfft_first,
         )
     if not isinstance(model, md.DONN):
         raise TypeError(f"cannot freeze {type(model).__name__}")
     return DeployedDONN(
         model.cfg, "cls", model.plan, frozen,
         model.source if source is None else source, model.in_grid.n,
-        detector=model.detector,
+        detector=model.detector, rfft_first=rfft_first,
     )
 
 
-def freeze(model, params) -> DeployedDONN:
+def freeze(model, params, plane_dtype: str = "float32",
+           rfft_first: bool = False) -> DeployedDONN:
     """Fold a trained model + params into a serving artifact.
 
     Covers all three model families (classify / RGB multi-channel /
     segmentation incl. the optical skip), uniform and heterogeneous
     (segmented-plan) stacks, every codesign mode (stochastic modes resolve
     to their deterministic eval form, see ``codesign.deployed_phase``).
+
+    ``plane_dtype`` selects the storage precision of the frozen modulation
+    planes (``"float32"`` bit-identical | ``"bfloat16"`` | ``"int8"``,
+    both with f32 accumulation — accuracy deltas measured per family in
+    BENCH_inference_throughput).  ``rfft_first`` opts the serving forward
+    into the half-spectrum real-to-complex first hop (uniform unpadded
+    non-fraunhofer plans with a real source; raises otherwise).
     """
     from repro.core import models as md
 
@@ -181,7 +231,7 @@ def freeze(model, params) -> DeployedDONN:
         phis = cm.plan.stack_phases(
             params["phase"][f"layer_{i}"] for i in range(len(cm.layers))
         )
-        frozen = cm.plan.frozen_modulation(phis)
+        frozen = cm.plan.frozen_modulation(phis, plane_dtype)
     elif isinstance(model, md.SegmentationDONN) or isinstance(model, md.DONN):
         if isinstance(model, md.DONN):
             phis = model.stacked_phases(params)
@@ -190,10 +240,10 @@ def freeze(model, params) -> DeployedDONN:
                 params["phase"][f"layer_{i}"]
                 for i in range(len(model.layers))
             )
-        frozen = model.plan.frozen_modulation(phis)
+        frozen = model.plan.frozen_modulation(phis, plane_dtype)
     else:
         raise TypeError(f"cannot freeze {type(model).__name__}")
-    return deployed_from_model(model, frozen)
+    return deployed_from_model(model, frozen, rfft_first=rfft_first)
 
 
 # --------------------------------------------------------------------------
@@ -289,15 +339,18 @@ class InferenceEngine:
             x_spec = P(*(("data",) + (None,) * (self._x_ndim() - 1)))
             # frozen planes replicate; the batch axis shards.  Every device
             # runs the full optical forward on its local rows — pure DP,
-            # zero cross-device collectives in the hot loop.
-            fa, fb = dep.frozen
-            rep = P(*((None,) * fa.ndim))
+            # zero cross-device collectives in the hot loop.  The spec tree
+            # mirrors the frozen tuple (2 leaves f32/bf16 storage, 4 with
+            # int8 quantized planes + their per-layer scales).
+            frozen_specs = jax.tree.map(
+                lambda a: P(*((None,) * jnp.ndim(a))), tuple(dep.frozen)
+            )
             out_nd = 3 if dep.family == "seg" else 2
             out_spec = P(*(("data",) + (None,) * (out_nd - 1)))
 
             def run(x, frozen):
                 return shard_map(
-                    fwd, mesh=mesh, in_specs=(x_spec, (rep, rep)),
+                    fwd, mesh=mesh, in_specs=(x_spec, frozen_specs),
                     out_specs=out_spec, check_vma=False,
                 )(x, frozen)
 

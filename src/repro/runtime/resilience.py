@@ -39,7 +39,15 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-ARTIFACT_FORMAT = 1
+# Format history:
+#   1 — f32 modulation plane pairs only (PR 7).
+#   2 — adds "plane_dtype" (float32 | bfloat16 | int8 frozen-plane storage;
+#       int8 planes are 4-tuples with per-layer scales) and "rfft_first"
+#       (half-spectrum real entry hop).  Format-1 artifacts still load
+#       (their planes are implicitly float32 pairs); unknown formats are
+#       rejected before any deserialization.
+ARTIFACT_FORMAT = 2
+KNOWN_FORMATS = (1, 2)
 ARTIFACT_FILE = "ARTIFACT.json"
 PLANES_DIR = "planes"
 
@@ -79,9 +87,11 @@ def save_deployed(deployed, artifact_dir) -> pathlib.Path:
     meta = {
         "format": ARTIFACT_FORMAT,
         "family": deployed.family,
-        # None for uniform plans (one (a, b) pair); segment count for
-        # segmented plans (tuple of pairs) — fixes the restore treedef
+        # None for uniform plans (one plane tuple); segment count for
+        # segmented plans (tuple of tuples) — fixes the restore treedef
         "segments": len(frozen) if deployed.heterogeneous else None,
+        "plane_dtype": deployed.plane_dtype,
+        "rfft_first": deployed.rfft_first,
         "spec": dsl.to_spec(deployed.cfg),
     }
     store.save(artifact_dir / PLANES_DIR, 0,
@@ -114,21 +124,28 @@ def load_deployed(artifact_dir, *, verify: bool = True):
     if not meta_path.exists():
         raise FileNotFoundError(f"no {ARTIFACT_FILE} under {artifact_dir}")
     meta = json.loads(meta_path.read_text())
-    if meta.get("format") != ARTIFACT_FORMAT:
+    if meta.get("format") not in KNOWN_FORMATS:
         raise ValueError(
             f"unsupported artifact format {meta.get('format')!r} "
-            f"(this build reads format {ARTIFACT_FORMAT})"
+            f"(this build reads formats {KNOWN_FORMATS})"
         )
     model, _cfg = dsl.from_spec(meta["spec"])
     nseg = meta.get("segments")
-    pair = (0.0, 0.0)
+    # restore target fixes the *treedef* only (leaf dtypes/shapes come
+    # from the store manifest): 2 leaves per plane tuple for f32/bf16
+    # storage, 4 for int8 (quantized planes + per-layer scales).
+    # Format-1 artifacts predate plane_dtype and are always f32 pairs.
+    plane_dtype = meta.get("plane_dtype", "float32")
+    tup = (0.0, 0.0, 0.0, 0.0) if plane_dtype == "int8" else (0.0, 0.0)
     target = {
-        "frozen": pair if nseg is None else tuple(pair for _ in range(nseg)),
+        "frozen": tup if nseg is None else tuple(tup for _ in range(nseg)),
         "source": 0.0,
     }
     state = store.restore(artifact_dir / PLANES_DIR, 0, target, verify=verify)
     return inf.deployed_from_model(model, state["frozen"],
-                                   source=state["source"])
+                                   source=state["source"],
+                                   rfft_first=bool(meta.get("rfft_first",
+                                                            False)))
 
 
 # --------------------------------------------------------------------------

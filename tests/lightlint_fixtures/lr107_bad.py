@@ -1,0 +1,20 @@
+"""LR107 bad fixture: complex pair assembly inside hot bodies."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hop(sr, si, hr, hi):
+    s = sr + 1j * si  # BUG: promotes the split pair inside a jit body
+    out = s * (hr - 1j * hi)  # BUG: and again for the TF pair
+    return out.real, out.imag
+
+
+def run(planes, u):
+    def body(carry, plane):
+        pr, pi = plane
+        carry = carry * (pr + 1j * pi)  # BUG: promotion inside a scan body
+        return carry, None
+
+    out, _ = jax.lax.scan(body, u, planes)
+    return jnp.abs(out)

@@ -1,0 +1,29 @@
+"""LR107 good fixture: pairs stay split; lax.complex only at FFT edges."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hop(sr, si, hr, hi):
+    # the fused-kernel idiom: split-plane complex multiply, no promotion
+    out_r = sr * hr - si * hi
+    out_i = sr * hi + si * hr
+    return out_r, out_i
+
+
+def run(planes, u):
+    def body(carry, plane):
+        pr, pi = plane
+        cr = carry.real * pr - carry.imag * pi
+        ci = carry.real * pi + carry.imag * pr
+        # the one genuinely-complex boundary uses lax.complex, not 1j*
+        carry = jnp.fft.fft2(jax.lax.complex(cr, ci))
+        return carry, None
+
+    out, _ = jax.lax.scan(body, u, planes)
+    return jnp.abs(out)
+
+
+def assemble_cold(pr, pi):
+    # outside any hot body: promotion is fine (e.g. cached TF constants)
+    return pr + 1j * pi

@@ -1,0 +1,352 @@
+"""PR-8 perf surfaces: fused spectral hop, quantized frozen planes,
+rfft first hop, artifact format 2.
+
+Four invariants:
+
+- **fused hop == jnp reference** at rtol <= 1e-5, values *and* gradients,
+  at the kernel level and through every plan path that fuses
+  (``use_pallas`` x {trainable, frozen, masked} x {cls, rgb, seg},
+  heterogeneous segments, rng codesign);
+- **quantized frozen planes** (``freeze(plane_dtype=...)``): the f32 path
+  stays bit-identical to the default, bf16 stays within the documented
+  5e-2 output tolerance, int8 is finite and close, and every dtype
+  round-trips through ``save_deployed``/``load_deployed`` and serves
+  through ``InferenceEngine`` bit-identically to its own ``freeze``;
+- **rfft first hop** (``freeze(rfft_first=True)``): half-spectrum entry
+  agrees with the full-spectrum forward, invalid deployments are rejected
+  eagerly, and the engine output is bit-identical to the deployed
+  forward;
+- **artifact format 2**: format-1 artifacts still load, unknown formats
+  are rejected with a clear error before any deserialization.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DONNConfig, build_model
+from repro.core import propagation as pp
+from repro.core.config import LayerSpec
+from repro.kernels import ops
+from repro.runtime.inference import InferenceEngine, freeze
+from repro.runtime.resilience import (
+    ARTIFACT_FILE, load_deployed, save_deployed,
+)
+
+TINY = dict(name="fq", n=32, depth=3, distance=0.05, det_size=6)
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), jnp.float32
+    )
+
+
+def _model(seed=0, **kw):
+    cfg = DONNConfig(**{**TINY, **kw})
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def _digits(b, shape=(28, 28), seed=0):
+    return np.random.default_rng(seed).random((b,) + shape, np.float32)
+
+
+# --------------------------------------------------------------------------
+class TestFusedHopKernel:
+    """fused_spectral_hop vs the unfused jnp reference."""
+
+    def _planes(self, pshape, seed=0):
+        r = np.random.default_rng(seed)
+        th_h = jnp.asarray(r.uniform(0, 2 * np.pi, pshape), jnp.float32)
+        amp_h = jnp.asarray(r.uniform(0.2, 1.0, pshape), jnp.float32)
+        th_m = jnp.asarray(r.uniform(0, 2 * np.pi, pshape), jnp.float32)
+        amp_m = jnp.asarray(r.uniform(0.2, 1.0, pshape), jnp.float32)
+        return th_h, amp_h, th_m, amp_m
+
+    @pytest.mark.parametrize("shape", [(2, 32, 32), (1, 24, 40), (3, 17, 33)])
+    def test_matches_ref(self, shape):
+        planes = self._planes(shape[-2:])
+        xr, xi = _rand(shape, 1), _rand(shape, 2)
+        gr, gi = ops.fused_spectral_hop(xr, xi, *planes)
+        want = ops.fused_spectral_hop_ref(
+            jax.lax.complex(xr, xi), *planes
+        )
+        np.testing.assert_allclose(gr, want.real, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gi, want.imag, rtol=1e-5, atol=1e-5)
+
+    def test_2d_input(self):
+        planes = self._planes((16, 16))
+        xr, xi = _rand((16, 16), 3), _rand((16, 16), 4)
+        gr, gi = ops.fused_spectral_hop(xr, xi, *planes)
+        assert gr.shape == (16, 16)
+        want = ops.fused_spectral_hop_ref(jax.lax.complex(xr, xi), *planes)
+        np.testing.assert_allclose(gr, want.real, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gi, want.imag, rtol=1e-5, atol=1e-5)
+
+    def test_plane_stack_broadcast(self):
+        """(H,W) TF planes + (C,H,W) modulation planes, x (B,C,H,W)."""
+        th_h, amp_h, _, _ = self._planes((16, 16), seed=5)
+        _, _, th_m, amp_m = self._planes((3, 16, 16), seed=6)
+        xr, xi = _rand((2, 3, 16, 16), 7), _rand((2, 3, 16, 16), 8)
+        gr, gi = ops.fused_spectral_hop(xr, xi, th_h, amp_h, th_m, amp_m)
+        want = ops.fused_spectral_hop_ref(
+            jax.lax.complex(xr, xi), th_h, amp_h, th_m, amp_m
+        )
+        np.testing.assert_allclose(gr, want.real, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gi, want.imag, rtol=1e-5, atol=1e-5)
+
+    def test_gradients_match_ref(self):
+        planes = self._planes((16, 16), seed=9)
+        xr, xi = _rand((2, 16, 16), 10), _rand((2, 16, 16), 11)
+
+        def loss(xr, xi, th_m):
+            gr, gi = ops.fused_spectral_hop(
+                xr, xi, planes[0], planes[1], th_m, planes[3]
+            )
+            return jnp.sum(gr**2 + 0.5 * gi**2)
+
+        def loss_ref(xr, xi, th_m):
+            w = ops.fused_spectral_hop_ref(
+                jax.lax.complex(xr, xi), planes[0], planes[1], th_m,
+                planes[3],
+            )
+            return jnp.sum(w.real**2 + 0.5 * w.imag**2)
+
+        got = jax.grad(loss, argnums=(0, 1, 2))(xr, xi, planes[2])
+        want = jax.grad(loss_ref, argnums=(0, 1, 2))(xr, xi, planes[2])
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+class TestFusedPlanAgreement:
+    """use_pallas (fused hop) vs the jnp scan, through build_model."""
+
+    CASES = [
+        ("classify", dict(), (28, 28)),
+        ("rgb", dict(channels=3, num_classes=6), (3, 28, 28)),
+        ("segmentation", dict(segmentation=True, skip_from=0,
+                              layer_norm=True), (28, 28)),
+        ("qat", dict(codesign="qat", device_levels=64), (28, 28)),
+    ]
+
+    @pytest.mark.parametrize("label,extra,x_shape",
+                             CASES, ids=[c[0] for c in CASES])
+    def test_forward_agreement(self, label, extra, x_shape):
+        m_jnp, p = _model(name=f"fp-{label}", **extra)
+        m_fused, _ = _model(name=f"fp-{label}", use_pallas=True, **extra)
+        x = jnp.asarray(_digits(3, x_shape))
+        np.testing.assert_allclose(
+            m_fused.apply(p, x), m_jnp.apply(p, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_gradients_agreement(self):
+        m_jnp, p = _model(name="fp-grad")
+        m_fused, _ = _model(name="fp-grad", use_pallas=True)
+        x = jnp.asarray(_digits(3))
+        g1 = jax.grad(lambda p: jnp.sum(m_fused.apply(p, x) ** 2))(p)
+        g2 = jax.grad(lambda p: jnp.sum(m_jnp.apply(p, x) ** 2))(p)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_rng_codesign_agreement(self):
+        """Stochastic codesign: same rng chain on both paths."""
+        extra = dict(codesign="gumbel", device_levels=16)
+        m_jnp, p = _model(name="fp-rng", **extra)
+        m_fused, _ = _model(name="fp-rng", use_pallas=True, **extra)
+        x = jnp.asarray(_digits(3))
+        rng = jax.random.PRNGKey(7)
+        np.testing.assert_allclose(
+            m_fused.apply(p, x, rng), m_jnp.apply(p, x, rng),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_hetero_segments_agreement(self):
+        layers = (LayerSpec(0.05, size=40), LayerSpec(0.05, size=40),
+                  LayerSpec(0.05, codesign="qat", device_levels=4))
+        m_jnp, p = _model(name="fp-het", layers=layers)
+        m_fused, _ = _model(name="fp-het", use_pallas=True, layers=layers)
+        x = jnp.asarray(_digits(2))
+        np.testing.assert_allclose(
+            m_fused.apply(p, x), m_jnp.apply(p, x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_frozen_fused_agreement(self):
+        """The frozen serving scan also fuses under use_pallas."""
+        m_jnp, p = _model(name="fp-frozen", codesign="qat")
+        m_fused, _ = _model(name="fp-frozen", use_pallas=True,
+                            codesign="qat")
+        x = _digits(2)
+        a = freeze(m_fused, p)
+        b = freeze(m_jnp, p)
+        np.testing.assert_allclose(
+            np.asarray(a.forward(jnp.asarray(x))),
+            np.asarray(b.forward(jnp.asarray(x))),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_fraunhofer_and_padded_plans_do_not_fuse(self):
+        """Fusion is gated off where the hop is not fft->tf->ifft."""
+        plan_fr = pp.plan_from_config(
+            DONNConfig(**{**TINY, "approximation": "fraunhofer",
+                          "band_limit": False, "distance": 2.5,
+                          "use_pallas": True}), 1.0)
+        plan_pad = pp.plan_from_config(
+            DONNConfig(**{**TINY, "pad": True, "use_pallas": True}), 1.0)
+        assert not plan_fr._fuse
+        assert not plan_pad._fuse
+
+
+# --------------------------------------------------------------------------
+class TestQuantizedPlanes:
+    def test_invalid_dtype_rejected(self):
+        model, params = _model(name="qp-bad")
+        with pytest.raises(ValueError, match="plane_dtype"):
+            freeze(model, params, plane_dtype="float16")
+
+    def test_f32_path_bit_identical_to_default(self):
+        model, params = _model(name="qp-f32", codesign="qat")
+        x = jnp.asarray(_digits(3))
+        a = freeze(model, params)
+        b = freeze(model, params, plane_dtype="float32")
+        assert a.plane_dtype == b.plane_dtype == "float32"
+        np.testing.assert_array_equal(
+            np.asarray(a.forward(x)), np.asarray(b.forward(x))
+        )
+
+    @pytest.mark.parametrize("dtype,tol", [("bfloat16", 5e-2),
+                                           ("int8", 2e-1)])
+    def test_quantized_delta_bounded(self, dtype, tol):
+        model, params = _model(name="qp-delta", codesign="qat")
+        x = jnp.asarray(_digits(4))
+        ref = np.asarray(freeze(model, params).forward(x))
+        got = np.asarray(freeze(model, params, plane_dtype=dtype).forward(x))
+        assert np.all(np.isfinite(got))
+        delta = np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)), 1e-12)
+        assert delta <= tol, f"{dtype}: {delta:.3e} > {tol}"
+        # class predictions survive the quantization at this scale
+        np.testing.assert_array_equal(
+            np.argmax(got, -1), np.argmax(ref, -1)
+        )
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+    def test_roundtrip_and_serving_bit_identical(self, dtype, tmp_path):
+        model, params = _model(name="qp-rt", codesign="qat")
+        x = _digits(2)
+        dep = freeze(model, params, plane_dtype=dtype)
+        assert dep.plane_dtype == dtype
+        ref = np.asarray(dep.forward(jnp.asarray(x)))
+        save_deployed(dep, tmp_path)
+        dep2 = load_deployed(tmp_path)
+        assert dep2.plane_dtype == dtype
+        np.testing.assert_array_equal(
+            np.asarray(dep2.forward(jnp.asarray(x))), ref
+        )
+        # engine vs the *jitted* forward: both sides compiled, bit-exact
+        eng = InferenceEngine(dep2, buckets=(2,))
+        np.testing.assert_array_equal(
+            eng.infer(x), np.asarray(jax.jit(dep2.forward)(jnp.asarray(x)))
+        )
+
+    def test_segmented_quantized_planes(self):
+        layers = (LayerSpec(0.05, size=40), LayerSpec(0.05, size=40),
+                  LayerSpec(0.05, codesign="qat", device_levels=4))
+        model, params = _model(name="qp-het", layers=layers)
+        x = jnp.asarray(_digits(2))
+        ref = np.asarray(freeze(model, params).forward(x))
+        got = np.asarray(
+            freeze(model, params, plane_dtype="bfloat16").forward(x)
+        )
+        delta = np.max(np.abs(got - ref)) / max(np.max(np.abs(ref)), 1e-12)
+        assert delta <= 5e-2
+
+
+# --------------------------------------------------------------------------
+class TestRfftFirstHop:
+    def test_agrees_with_full_spectrum(self):
+        model, params = _model(name="rf-agree", codesign="qat")
+        x = jnp.asarray(_digits(3))
+        ref = np.asarray(freeze(model, params).forward(x))
+        got = np.asarray(freeze(model, params, rfft_first=True).forward(x))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+    def test_engine_bit_identical_to_deployed_forward(self):
+        model, params = _model(name="rf-eng")
+        x = _digits(2)
+        dep = freeze(model, params, rfft_first=True)
+        ref = np.asarray(jax.jit(dep.forward)(jnp.asarray(x)))
+        eng = InferenceEngine(dep, buckets=(2,))
+        np.testing.assert_array_equal(eng.infer(x), ref)
+
+    def test_engine_distinct_from_plain_executable(self):
+        """rfft and plain deployments must not share cached executables."""
+        model, params = _model(name="rf-key")
+        assert (freeze(model, params).static_key()
+                != freeze(model, params, rfft_first=True).static_key())
+
+    def test_roundtrip_preserves_rfft_flag(self, tmp_path):
+        model, params = _model(name="rf-rt", codesign="qat")
+        x = _digits(2)
+        dep = freeze(model, params, rfft_first=True, plane_dtype="int8")
+        ref = np.asarray(dep.forward(jnp.asarray(x)))
+        save_deployed(dep, tmp_path)
+        dep2 = load_deployed(tmp_path)
+        assert dep2.rfft_first and dep2.plane_dtype == "int8"
+        np.testing.assert_array_equal(
+            np.asarray(dep2.forward(jnp.asarray(x))), ref
+        )
+
+    def test_heterogeneous_rejected(self):
+        layers = (LayerSpec(0.05, size=40), LayerSpec(0.05, size=40),
+                  LayerSpec(0.05,))
+        model, params = _model(name="rf-het", layers=layers)
+        with pytest.raises(ValueError, match="rfft"):
+            freeze(model, params, rfft_first=True)
+
+    def test_unsupported_plan_rejected(self):
+        model, params = _model(name="rf-pad", pad=True)
+        with pytest.raises(ValueError, match="rfft"):
+            freeze(model, params, rfft_first=True)
+
+
+# --------------------------------------------------------------------------
+class TestArtifactFormat:
+    def test_format_field_is_current(self, tmp_path):
+        model, params = _model(name="af-cur")
+        save_deployed(freeze(model, params), tmp_path)
+        meta = json.loads((tmp_path / ARTIFACT_FILE).read_text())
+        assert meta["format"] == 2
+        assert meta["plane_dtype"] == "float32"
+        assert meta["rfft_first"] is False
+
+    def test_unknown_format_rejected_with_clear_error(self, tmp_path):
+        model, params = _model(name="af-unk")
+        save_deployed(freeze(model, params), tmp_path)
+        meta_path = tmp_path / ARTIFACT_FILE
+        meta = json.loads(meta_path.read_text())
+        meta["format"] = 99
+        meta_path.write_text(json.dumps(meta))
+        with pytest.raises(ValueError, match=r"format 99.*reads formats"):
+            load_deployed(tmp_path)
+
+    def test_format_1_artifact_still_loads(self, tmp_path):
+        """Legacy metas (no plane_dtype/rfft_first) imply f32 pairs."""
+        model, params = _model(name="af-v1", codesign="qat")
+        x = _digits(2)
+        dep = freeze(model, params)
+        ref = np.asarray(dep.forward(jnp.asarray(x)))
+        save_deployed(dep, tmp_path)
+        meta_path = tmp_path / ARTIFACT_FILE
+        meta = json.loads(meta_path.read_text())
+        meta["format"] = 1
+        del meta["plane_dtype"], meta["rfft_first"]
+        meta_path.write_text(json.dumps(meta))
+        dep2 = load_deployed(tmp_path)
+        assert dep2.plane_dtype == "float32" and not dep2.rfft_first
+        np.testing.assert_array_equal(
+            np.asarray(dep2.forward(jnp.asarray(x))), ref
+        )

@@ -106,6 +106,19 @@ class TestBf16Accumulation:
         assert lint_fixture("lr106_good.py") == []
 
 
+# ---------------------------------------------------------------- LR107
+class TestComplexPromotionInHotPath:
+    def test_fires_on_pair_assembly_in_jit_and_scan(self):
+        findings = lint_fixture("lr107_bad.py")
+        assert rule_ids(findings) == {"LR107"}
+        # both jit-body assemblies plus the scan-body one
+        assert len(findings) == 3
+        assert all("lax.complex" in f.message for f in findings)
+
+    def test_silent_on_split_pair_and_lax_complex(self):
+        assert lint_fixture("lr107_good.py") == []
+
+
 # ---------------------------------------------------------------- LR201
 class TestPhysicsConfigValidity:
     def test_fires_on_invalid_literal_configs(self):

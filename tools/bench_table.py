@@ -46,6 +46,16 @@ def _resilience_headline(meta: dict) -> str:
     return ", ".join(parts)
 
 
+def _roofline_headline(meta: dict) -> str:
+    """Peak fraction + binding roof per measured cell."""
+    parts = []
+    for cell, v in sorted(meta.get("cells", {}).items()):
+        frac = v.get("fraction") if isinstance(v, dict) else None
+        if isinstance(frac, (int, float)):
+            parts.append(f"{cell} {frac:.2f}({v.get('bound', '?')})")
+    return ", ".join(parts)
+
+
 # suite -> (PR, headline metric extractor, description)
 HEADLINES = {
     "propagation_plan": (
@@ -66,6 +76,12 @@ HEADLINES = {
     "resilience": (
         "7", _resilience_headline,
         "overload shedding, artifact cold-start, phase-noise robustness"),
+    "kernel_breakdown": (
+        "8", lambda m: _fmt_map(_pick(m), "x"),
+        "per-operator batched-jit vs per-sample numpy (Fig. 9)"),
+    "roofline": (
+        "8", _roofline_headline,
+        "achieved vs measured machine peak per tier-1 cell"),
 }
 
 
@@ -92,29 +108,60 @@ def render(summary_path: pathlib.Path) -> str:
     return "\n".join(lines)
 
 
+def render_plane_dtype(summary_path: pathlib.Path) -> str:
+    """Quantized-plane serving table (family x plane dtype)."""
+    summary = json.loads(summary_path.read_text())
+    meta = summary.get("inference_throughput", {}).get("meta", {})
+    cells = meta.get("speedups", {}).get("plane_dtype", {})
+    lines = [
+        "| family | plane dtype | req/s (b32) | max output delta vs f32 |",
+        "|--------|-------------|-------------|-------------------------|",
+    ]
+    for family in sorted(cells):
+        for dtype in ("float32", "bfloat16", "int8"):
+            v = cells[family].get(dtype)
+            if not isinstance(v, dict):
+                continue
+            rps = v.get("req_per_sec")
+            delta = v.get("max_rel_delta")
+            lines.append(
+                f"| {family} | `{dtype}` | {rps:g} | {delta:.1e} |"
+            )
+    return "\n".join(lines) if len(lines) > 2 else ""
+
+
 START = "<!-- bench-table:start -->"
 END = "<!-- bench-table:end -->"
+PD_START = "<!-- plane-dtype-table:start -->"
+PD_END = "<!-- plane-dtype-table:end -->"
 
 
-def inject_readme(table: str, readme: pathlib.Path) -> None:
+def inject_readme(table: str, readme: pathlib.Path,
+                  start: str = START, end: str = END) -> None:
     """Replace the marked block in README.md with the rendered table."""
     text = readme.read_text()
-    if START not in text or END not in text:
-        raise SystemExit(f"no {START}/{END} markers in {readme}")
-    head, rest = text.split(START, 1)
-    _, tail = rest.split(END, 1)
-    readme.write_text(f"{head}{START}\n{table}\n{END}{tail}")
-    print(f"# updated {readme}")
+    if start not in text or end not in text:
+        raise SystemExit(f"no {start}/{end} markers in {readme}")
+    head, rest = text.split(start, 1)
+    _, tail = rest.split(end, 1)
+    readme.write_text(f"{head}{start}\n{table}\n{end}{tail}")
+    print(f"# updated {readme} ({start})")
 
 
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     path = pathlib.Path(args[0]) if args else REPO / "BENCH_summary.json"
     table = render(path)
+    pd_table = render_plane_dtype(path)
     if "--write-readme" in sys.argv:
         inject_readme(table, REPO / "README.md")
+        if pd_table:
+            inject_readme(pd_table, REPO / "README.md", PD_START, PD_END)
     else:
         print(table)
+        if pd_table:
+            print()
+            print(pd_table)
 
 
 if __name__ == "__main__":

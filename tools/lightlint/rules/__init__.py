@@ -4,6 +4,7 @@ from lightlint.rules.jax_rules import (
     Bf16Accumulation,
     CacheKeyCompleteness,
     ClosureRetraceHazard,
+    ComplexPromotionInHotPath,
     DonationAliasing,
     HostSyncInHotPath,
     JitInLoop,
@@ -20,6 +21,7 @@ ALL_RULES = (
     JitInLoop,  # LR104
     ClosureRetraceHazard,  # LR105
     Bf16Accumulation,  # LR106
+    ComplexPromotionInHotPath,  # LR107
     PhysicsConfigValidity,  # LR201
     SpecArtifactValidity,  # LR202
 )

@@ -714,3 +714,78 @@ class Bf16Accumulation(Rule):
                         f"explicit f32 accumulator; pass dtype=jnp.float32 "
                         f"(or preferred_element_type)"))
         return out
+
+
+# --------------------------------------------------------------------------
+# LR107 — complex promotion of split real/imag pairs in hot bodies
+# --------------------------------------------------------------------------
+class ComplexPromotionInHotPath(Rule):
+    """LR107: ``a + 1j*b`` pair assembly inside compiled/scanned code.
+
+    The propagation engine carries fields as split real/imag planes so
+    the elementwise sites stay fused (``phase_tf_apply``,
+    ``fused_spectral_hop``).  Re-assembling a complex array from the
+    split pair inside a scan body or jitted function (``a + 1j*b`` /
+    ``a - 1j*b``) materializes an interleaved complex temporary between
+    kernels — exactly the promotion the fused spectral-hop kernel exists
+    to avoid — and silently widens every downstream op to complex
+    arithmetic.  Use ``jax.lax.complex(a, b)`` at the single FFT
+    boundary that genuinely needs a complex operand, or keep the pair
+    split through the fused kernels.
+
+    Hot regions are discovered exactly like LR103: scan bodies,
+    jit/pjit'd and remat'd functions, ``cached_executable`` targets, and
+    their nested defs.
+    """
+
+    rule_id = "LR107"
+    title = "complex pair promotion in hot path"
+    severity = ERROR
+
+    @staticmethod
+    def _is_imag_mult(node) -> bool:
+        """``1j * x`` / ``x * 1j`` (any complex constant coefficient)."""
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Mult)):
+            return False
+        return any(isinstance(s, ast.Constant) and isinstance(s.value, complex)
+                   for s in (node.left, node.right))
+
+    def visit(self, tree: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        hot_names = HostSyncInHotPath._hot_function_names(tree)
+        hot_fns: List[ast.AST] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name in hot_names or any(
+                        HostSyncInHotPath._is_jit_decorator(d)
+                        for d in node.decorator_list
+                ):
+                    hot_fns.append(node)
+            elif isinstance(node, ast.Call) and (
+                    call_name(node) or "").split(".")[-1] in {"jit", "pjit"}:
+                hot_fns.extend(a for a in node.args
+                               if isinstance(a, ast.Lambda))
+        seen: Set[int] = set()
+        for fn in hot_fns:
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            nodes = []
+            for stmt in body:
+                nodes.append(stmt)
+                nodes.extend(ast.walk(stmt))
+            for node in nodes:
+                if id(node) in seen:
+                    continue
+                if (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, (ast.Add, ast.Sub))
+                        and (self._is_imag_mult(node.left)
+                             or self._is_imag_mult(node.right))):
+                    seen.add(id(node))
+                    out.append(ctx.finding(
+                        self, node,
+                        "complex pair assembly (a +/- 1j*b) inside a "
+                        "compiled region promotes split real/imag planes "
+                        "to an interleaved complex temporary; use "
+                        "jax.lax.complex(a, b) at the FFT boundary or "
+                        "keep the pair split through the fused kernels"))
+        return out
