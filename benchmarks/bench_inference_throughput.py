@@ -26,6 +26,9 @@ dispatch amortization + batched FFT, the big win from the codesign fold):
   family — serving req/s and max output delta vs the f32 engine (bf16
   gated at 5e-2; int8 measured and reported).
 - ``micro_batcher``: end-to-end dispatcher (queue + deadline) req/s.
+- ``latency_under_load``: p50/p99 submit-to-result latency of the
+  continuous-batching fleet under open-loop Poisson arrivals at ~50% of
+  measured capacity (the open-loop complement to the closed-loop rows).
 - ``multi_device``: subprocess on a forced 4-device host platform —
   dp=4 engine vs single-device engine outputs (rtol <= 1e-5) and req/s
   (host devices oversubscribe 2 cores, so scaling is not expected to be
@@ -240,6 +243,51 @@ def _bench_micro_batcher(rows) -> dict:
             "batches": engine.stats["batches"]}
 
 
+def _bench_latency_under_load(rows) -> dict:
+    """p50/p99 latency under open-loop Poisson load at ~50% utilization.
+
+    The throughput cells above measure closed-loop batch serving; real
+    traffic is open-loop.  This cell measures the continuous-batching
+    fleet (``repro.runtime.fleet``) at half of the measured closed-loop
+    capacity — the latency a user sees from a healthily-provisioned
+    deployment (the saturated and faulted regimes live in
+    ``bench_serving_fleet``).
+    """
+    from benchmarks.bench_serving_fleet import _percentiles, _poisson_load
+    from repro.runtime.fleet import FleetRouter
+
+    cfg = DONNConfig(name="inf-load", n=64, depth=8, distance=0.05,
+                     det_size=8, codesign="qat", response_gamma=1.2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dep = freeze(model, params)
+    bucket = 8
+    engine = InferenceEngine(dep, buckets=(bucket,))
+    engine.warmup()
+    reqs = _requests(64, (28, 28), seed=6)
+    cap_s = min(_engine_loop(engine, reqs, bucket) for _ in range(2))
+    cap_rps = reqs.shape[0] / cap_s
+    rate_hz = cap_rps / 2.0
+
+    router = FleetRouter([engine])
+    lat, _, shed, failed = _poisson_load(router, list(reqs), rate_hz, seed=7)
+    router.close()
+    if shed or failed:
+        raise AssertionError(
+            f"under-provisioned? shed={shed} failed={failed} at 50% load"
+        )
+    p50, p99 = _percentiles(lat)
+    name = "infer/latency_under_load/p50_p99"
+    derived = (f"p50_ms={p50:.2f},p99_ms={p99:.2f},"
+               f"rate_hz={rate_hz:.0f},capacity_rps={cap_rps:.0f},"
+               f"utilization=0.5,continuous_batching=True")
+    row(name, p50 * 1e3, derived)
+    rows.append({"name": name, "us": p50 * 1e3, "derived": derived})
+    return {"p50_ms": round(p50, 2), "p99_ms": round(p99, 2),
+            "rate_hz": round(rate_hz, 1),
+            "capacity_rps": round(cap_rps, 1)}
+
+
 def _bench_multi_device(rows) -> dict:
     """dp=4 vs single device in a forced-4-device subprocess."""
     code = """
@@ -337,6 +385,7 @@ def main() -> None:
             rows, buckets=(8, 32), n_reqs=32),
         "plane_dtype": _bench_plane_dtypes(rows),
         "micro_batcher": _bench_micro_batcher(rows),
+        "latency_under_load": _bench_latency_under_load(rows),
         "multi_device": _bench_multi_device(rows),
     }
     meta = {

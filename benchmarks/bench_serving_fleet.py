@@ -1,0 +1,328 @@
+"""Serving-fleet latency under open-loop Poisson load, with faults.
+
+The continuous-batching fleet (``repro.runtime.fleet``) claims the three
+things a serving tier must actually deliver — low latency under live
+load, zero dropped requests through replica crashes, and zero-downtime
+model swaps.  This suite measures all three with an **open-loop Poisson
+load generator** (exponential inter-arrival times, the honest arrival
+model: the generator does not slow down when the fleet does):
+
+- ``fleet/poisson/r<N>``: p50/p99 submit-to-result latency and served
+  req/s at a fixed arrival rate through N healthy replicas.
+- ``fleet/continuous_vs_deadline``: the same Poisson stream through the
+  deadline ``MicroBatcher`` (max_wait_ms=2) vs the continuous
+  ``FleetRouter`` on one replica — the open-slot admission win.
+- ``fleet/failover_kill``: 2 flaky replicas under Poisson load with a
+  **mid-run replica kill**; the run *asserts* zero dropped requests and
+  outputs **bit-identical** to the reference engine (the killed
+  replica's in-flight group is retried on the healthy one; a single
+  serving bucket pins every group to the same compiled program), and
+  reports the retry/failover rates.
+- ``fleet/slow_replica``: one replica stalls 25ms per call —
+  probation-based dispatch keeps the tail from collapsing onto it.
+- ``fleet/drain_swap``: a supervised from-artifact fleet drains (flush
+  asserted), resumes, then **warm-swaps** to a second artifact while a
+  pump thread keeps submitting; asserts zero drops, no admission gap
+  (rolling swap never raises ``DrainingError``) and every in-swap output
+  bit-equal to exactly one of the two models.
+
+Rows persist to ``artifacts/bench/BENCH_serving_fleet.json`` (tier-1:
+gated by ``benchmarks/run.py --check``).
+
+    PYTHONPATH=src:. python benchmarks/bench_serving_fleet.py
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, write_bench_json
+from repro.core import DONNConfig, build_model
+from repro.runtime.fleet import ContinuousBatcher, FleetRouter
+from repro.runtime.inference import InferenceEngine, MicroBatcher, freeze
+from repro.runtime.resilience import DrainingError, save_deployed
+from repro.testing import FlakyEngine, SlowEngine, kill_replica
+
+BUCKET = 8  # single serving bucket: every group -> one compiled program
+
+
+def _cfg(name="fleet", seed_n=32) -> DONNConfig:
+    return DONNConfig(name=name, n=seed_n, depth=2, distance=0.05,
+                      det_size=6, codesign="qat")
+
+
+def _deployed(seed=0):
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return freeze(model, params)
+
+
+def _engine(dep):
+    eng = InferenceEngine(dep, buckets=(BUCKET,))
+    eng.warmup()
+    return eng
+
+
+def _poisson_load(router, reqs, rate_hz, seed=0, timeout_ms=None):
+    """Open-loop Poisson arrivals: submit, never backpressure the clock.
+
+    Returns (latencies_s, outputs, shed, failed) — every admitted request
+    is accounted for; ``outputs`` aligns with the admitted order.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=len(reqs))
+    futs, shed = [], 0
+    done_at = {}  # future -> completion timestamp, stamped by callback
+    for x, gap in zip(reqs, gaps):
+        time.sleep(gap)
+        t_sub = time.perf_counter()
+        try:
+            f = router.submit(x, timeout_ms=timeout_ms)
+        except Exception:  # noqa: BLE001 - shed/draining are outcomes
+            shed += 1
+            continue
+        # stamp completion in the callback: collecting results serially
+        # below must not inflate the latency of early finishers
+        f.add_done_callback(
+            lambda fut: done_at.setdefault(id(fut), time.perf_counter())
+        )
+        futs.append((t_sub, x, f))
+    lat, outs, failed = [], [], 0
+    for t0, x, f in futs:
+        try:
+            outs.append((x, f.result(timeout=120)))
+            lat.append(done_at[id(f)] - t0)
+        except Exception:  # noqa: BLE001 - exhausted retries are outcomes
+            failed += 1
+    return np.asarray(lat), outs, shed, failed
+
+
+def _percentiles(lat_s) -> tuple:
+    lat_ms = np.sort(np.asarray(lat_s)) * 1e3
+    p50 = lat_ms[len(lat_ms) // 2]
+    p99 = lat_ms[min(len(lat_ms) - 1, int(len(lat_ms) * 0.99))]
+    return float(p50), float(p99)
+
+
+def _bench_poisson(rows, dep, ref_engine, n_reqs=96, rate_hz=150.0) -> dict:
+    reqs = np.random.default_rng(1).random((n_reqs, 28, 28), np.float32)
+    out = {}
+    for n_rep in (1, 2):
+        router = FleetRouter([_engine(dep) for _ in range(n_rep)])
+        t0 = time.perf_counter()
+        lat, _, shed, failed = _poisson_load(router, reqs, rate_hz, seed=2)
+        dt = time.perf_counter() - t0
+        router.close()
+        p50, p99 = _percentiles(lat)
+        rps = len(lat) / dt
+        name = f"fleet/poisson/r{n_rep}"
+        derived = (f"p50_ms={p50:.1f},p99_ms={p99:.1f},"
+                   f"req_per_sec={rps:.1f},rate_hz={rate_hz:.0f},"
+                   f"shed={shed},failed={failed}")
+        row(name, p50 * 1e3, derived)
+        rows.append({"name": name, "us": p50 * 1e3, "derived": derived})
+        if failed or shed:
+            raise AssertionError(
+                f"healthy fleet dropped traffic: shed={shed} failed={failed}"
+            )
+        out[f"r{n_rep}"] = {"p50_ms": round(p50, 2), "p99_ms": round(p99, 2),
+                            "req_per_sec": round(rps, 1)}
+    return out
+
+
+def _bench_continuous_vs_deadline(rows, dep, n_reqs=96,
+                                  rate_hz=100.0) -> dict:
+    reqs = np.random.default_rng(3).random((n_reqs, 28, 28), np.float32)
+    mb = MicroBatcher(_engine(dep), max_wait_ms=2.0)
+    lat_mb, _, _, _ = _poisson_load(mb, reqs, rate_hz, seed=4)
+    mb.close()
+    cb = ContinuousBatcher(_engine(dep))
+    lat_cb, _, _, _ = _poisson_load(cb, reqs, rate_hz, seed=4)
+    cb.close()
+    p50_mb, p99_mb = _percentiles(lat_mb)
+    p50_cb, p99_cb = _percentiles(lat_cb)
+    win = p50_mb / max(p50_cb, 1e-9)
+    name = "fleet/continuous_vs_deadline"
+    derived = (f"p50_continuous_ms={p50_cb:.2f},p50_deadline_ms={p50_mb:.2f},"
+               f"p99_continuous_ms={p99_cb:.2f},p99_deadline_ms={p99_mb:.2f},"
+               f"p50_win={win:.2f}x")
+    row(name, p50_cb * 1e3, derived)
+    rows.append({"name": name, "us": p50_cb * 1e3, "derived": derived})
+    return {"p50_continuous_ms": round(p50_cb, 2),
+            "p50_deadline_ms": round(p50_mb, 2),
+            "p50_win": round(win, 2)}
+
+
+def _bench_failover_kill(rows, dep, ref_engine, n_reqs=96,
+                         rate_hz=150.0) -> dict:
+    """Mid-run replica crash: zero drops, bit-identical retried outputs."""
+    reqs = np.random.default_rng(5).random((n_reqs, 28, 28), np.float32)
+    router = FleetRouter(
+        [FlakyEngine(_engine(dep)), FlakyEngine(_engine(dep))], seed=6,
+    )
+    killed = {}
+
+    def kill_later():
+        time.sleep((n_reqs / rate_hz) * 0.4)  # ~40% through the run
+        killed["engine"] = kill_replica(router)
+
+    killer = threading.Thread(target=kill_later, daemon=True)
+    killer.start()
+    t0 = time.perf_counter()
+    lat, outs, shed, failed = _poisson_load(router, reqs, rate_hz, seed=7)
+    dt = time.perf_counter() - t0
+    killer.join(timeout=30)
+    stats = router.stats()
+    router.close()
+    if "engine" not in killed:
+        raise AssertionError("the mid-run kill never fired")
+    if shed or failed or len(outs) != n_reqs:
+        raise AssertionError(
+            f"replica crash dropped traffic: shed={shed} failed={failed} "
+            f"served={len(outs)}/{n_reqs}"
+        )
+    # bit-identity: every row equals the reference engine's output for
+    # that request (single bucket -> same compiled program on any replica)
+    xs = np.stack([x for x, _ in outs])
+    got = np.stack([o for _, o in outs])
+    ref = np.concatenate([ref_engine.infer(xs[lo:lo + BUCKET])
+                          for lo in range(0, len(xs), BUCKET)])
+    if not np.array_equal(got, ref):
+        raise AssertionError("failover outputs are not bit-identical")
+    p50, p99 = _percentiles(lat)
+    retry_rate = stats["retried"] / n_reqs
+    failover = stats["replica_failures"]
+    name = "fleet/failover_kill"
+    derived = (f"p50_ms={p50:.1f},p99_ms={p99:.1f},"
+               f"served={len(outs)}/{n_reqs},dropped=0,"
+               f"retry_rate={retry_rate:.3f},replica_failures={failover},"
+               f"bit_identical=True")
+    row(name, p50 * 1e3, derived)
+    rows.append({"name": name, "us": p50 * 1e3, "derived": derived})
+    return {"p50_ms": round(p50, 2), "p99_ms": round(p99, 2),
+            "dropped": 0, "retry_rate": round(retry_rate, 3),
+            "replica_failures": failover, "bit_identical": True,
+            "req_per_sec": round(len(outs) / dt, 1)}
+
+
+def _bench_slow_replica(rows, dep, n_reqs=64, rate_hz=100.0) -> dict:
+    reqs = np.random.default_rng(8).random((n_reqs, 28, 28), np.float32)
+    router = FleetRouter(
+        [SlowEngine(_engine(dep), delay_s=0.025), _engine(dep)], seed=9,
+    )
+    lat, _, shed, failed = _poisson_load(router, reqs, rate_hz, seed=10)
+    router.close()
+    if shed or failed:
+        raise AssertionError("slow-replica fleet dropped traffic")
+    p50, p99 = _percentiles(lat)
+    name = "fleet/slow_replica"
+    derived = (f"p50_ms={p50:.1f},p99_ms={p99:.1f},slow_delay_ms=25,"
+               f"served={len(lat)}/{n_reqs}")
+    row(name, p50 * 1e3, derived)
+    rows.append({"name": name, "us": p50 * 1e3, "derived": derived})
+    return {"p50_ms": round(p50, 2), "p99_ms": round(p99, 2)}
+
+
+def _bench_drain_swap(rows, tmpdir) -> dict:
+    """Drain flushes everything; a rolling warm swap drops nothing."""
+    model = build_model(_cfg())
+    dep0 = freeze(model, model.init(jax.random.PRNGKey(0)))
+    dep1 = freeze(model, model.init(jax.random.PRNGKey(1)))
+    a0, a1 = os.path.join(tmpdir, "a0"), os.path.join(tmpdir, "a1")
+    save_deployed(dep0, a0)
+    save_deployed(dep1, a1)
+    probe = np.random.default_rng(11).random((28, 28), np.float32)
+    ref0 = _engine(dep0).infer(probe[None])[0]
+    ref1 = _engine(dep1).infer(probe[None])[0]
+    if np.array_equal(ref0, ref1):
+        raise AssertionError("swap would be unobservable")
+
+    router = FleetRouter.from_artifact(a0, replicas=2, buckets=(BUCKET,))
+    # drain: everything already admitted is flushed, nothing dropped
+    futs = [router.submit(probe) for _ in range(24)]
+    t0 = time.perf_counter()
+    if not router.drain(timeout=60):
+        raise AssertionError("drain did not flush")
+    t_drain = time.perf_counter() - t0
+    for f in futs:
+        np.testing.assert_array_equal(f.result(timeout=1), ref0)
+    router.resume()
+
+    # rolling swap under live traffic: no DrainingError, zero drops
+    stop = threading.Event()
+    live, gaps = [], []
+
+    def pump():
+        while not stop.is_set():
+            try:
+                live.append(router.submit(probe))
+            except DrainingError:
+                gaps.append(1)
+            time.sleep(0.002)
+
+    t = threading.Thread(target=pump, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    router.swap_artifact(a1, rolling=True)
+    t_swap = time.perf_counter() - t0
+    stop.set()
+    t.join(timeout=30)
+    old = new = 0
+    for f in live:
+        out = f.result(timeout=120)
+        if np.array_equal(out, ref0):
+            old += 1
+        elif np.array_equal(out, ref1):
+            new += 1
+        else:
+            raise AssertionError("in-swap output matches neither model")
+    if gaps:
+        raise AssertionError("rolling swap closed admission")
+    post = router.submit(probe).result(timeout=120)
+    np.testing.assert_array_equal(post, ref1)
+    stats = router.stats()
+    router.close()
+    if stats["failed"]:
+        raise AssertionError(f"swap dropped {stats['failed']} request(s)")
+    name = "fleet/drain_swap"
+    derived = (f"drain_flush_ms={t_drain * 1e3:.0f},"
+               f"swap_ms={t_swap * 1e3:.0f},in_swap_served={old + new},"
+               f"served_old={old},served_new={new},dropped=0,"
+               f"admission_gap=0")
+    row(name, t_swap * 1e6, derived)
+    rows.append({"name": name, "us": t_swap * 1e6, "derived": derived})
+    return {"drain_flush_ms": round(t_drain * 1e3, 1),
+            "swap_ms": round(t_swap * 1e3, 1),
+            "in_swap_served": old + new, "dropped": 0}
+
+
+def main() -> None:
+    rows: list = []
+    dep = _deployed()
+    ref_engine = _engine(dep)
+    with tempfile.TemporaryDirectory() as tmpdir:
+        summary = {
+            "poisson": _bench_poisson(rows, dep, ref_engine),
+            "continuous_vs_deadline":
+                _bench_continuous_vs_deadline(rows, dep),
+            "failover_kill": _bench_failover_kill(rows, dep, ref_engine),
+            "slow_replica": _bench_slow_replica(rows, dep),
+            "drain_swap": _bench_drain_swap(rows, tmpdir),
+        }
+    meta = {
+        "backend": jax.default_backend(),
+        "cores": os.cpu_count(),
+        "bucket": BUCKET,
+        "summary": summary,
+    }
+    write_bench_json("serving_fleet", rows, meta)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping (DESIGN.md §7):
   train_throughput -> bench_train_throughput (chunked training drivers)
   inference_throughput -> bench_inference_throughput (deployment engine)
   resilience  -> bench_resilience (overload shed, cold-start, noise curves)
+  serving_fleet -> bench_serving_fleet (Poisson fleet latency, failover, swap)
   roofline    -> bench_roofline (measured achieved-vs-peak per tier-1 cell)
 
 Usage: ``python benchmarks/run.py [--check] [filter ...]`` — any number
@@ -34,7 +35,7 @@ import traceback
 # suites whose cells gate CI: they must be fresh in the uploaded summary
 TIER1_SUITES = ("propagation_plan", "dse_batched", "hetero",
                 "train_throughput", "inference_throughput", "resilience",
-                "kernel_breakdown", "roofline")
+                "serving_fleet", "kernel_breakdown", "roofline")
 
 
 def stale_tier1(summary: dict) -> list:
@@ -92,6 +93,7 @@ def main() -> None:
         bench_runtime,
         bench_scaling,
         bench_segmentation,
+        bench_serving_fleet,
         bench_train_throughput,
     )
 
@@ -107,6 +109,7 @@ def main() -> None:
         ("train_throughput", bench_train_throughput.main),
         ("inference_throughput", bench_inference_throughput.main),
         ("resilience", bench_resilience.main),
+        ("serving_fleet", bench_serving_fleet.main),
         ("fig10_scaling", bench_scaling.main),
         ("fig7_regularization", bench_regularization.main),
         ("fig5_table3_dse", bench_dse.main),

@@ -12,6 +12,11 @@ Artifact flow (``repro.runtime.resilience``): ``--save-artifact DIR``
 persists the frozen deployment after freezing; ``--artifact DIR``
 cold-starts serving from a previously saved artifact with **no model
 build, training or freezing at all** — the crashed-replica recovery path.
+The artifact's format version and architecture spec are validated
+*before* any warmup, so a stale or corrupt artifact exits with a clear
+error instead of failing mid-deploy.  ``--replicas N`` serves through the
+continuous-batching ``FleetRouter`` (``repro.runtime.fleet``) over N
+engine replicas instead of the single-engine ``MicroBatcher``.
 
 Offline demo at laptop scale; the same engine objects back the
 throughput benchmark (``benchmarks/bench_inference_throughput.py``).
@@ -27,6 +32,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -38,6 +44,7 @@ from repro.runtime.inference import (
 )
 from repro.runtime.resilience import (
     DeadlineExceededError, OverloadedError, load_deployed, save_deployed,
+    validate_artifact,
 )
 
 
@@ -87,14 +94,26 @@ def main(argv=None):
                     help="persist the frozen deployment to this dir")
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help="data-parallel dispatch over N devices (0 = off)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a continuous-batching FleetRouter "
+                         "over N replicas (0 = single MicroBatcher)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     if args.artifact:
+        # Validate format version + architecture spec BEFORE any engine
+        # warmup, so a bad artifact exits cleanly instead of mid-deploy.
+        try:
+            meta = validate_artifact(args.artifact)
+        except (FileNotFoundError, ValueError) as e:
+            print(f"[serve_donn] ERROR: artifact {args.artifact!r} failed "
+                  f"pre-deploy validation: {e}", file=sys.stderr)
+            sys.exit(2)
         t0 = time.perf_counter()
         deployed = load_deployed(args.artifact)
         t_freeze = time.perf_counter() - t0
-        print(f"[serve_donn] cold-started from {args.artifact} in "
+        print(f"[serve_donn] cold-started from {args.artifact} "
+              f"(format {meta['format']}, family {meta['family']!r}) in "
               f"{t_freeze * 1e3:.0f}ms (no training state touched)")
         cfg = deployed.cfg
     else:
@@ -123,14 +142,20 @@ def main(argv=None):
         save_deployed(deployed, args.save_artifact)
         print(f"[serve_donn] saved artifact to {args.save_artifact}")
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    engine = InferenceEngine(
-        deployed, buckets=buckets,
-        mesh_devices=args.mesh_devices or None,
-    )
-    compiles = engine.warmup()
+    n_replicas = max(args.replicas, 0)
+    engines = []
+    for _ in range(n_replicas or 1):
+        engine = InferenceEngine(
+            deployed, buckets=buckets,
+            mesh_devices=args.mesh_devices or None,
+        )
+        compiles = engine.warmup()
+        engines.append(engine)
+    engine = engines[0]
     verb = "loaded" if args.artifact else "froze"
     print(f"[serve_donn] {verb} {cfg.name} in {t_freeze * 1e3:.0f}ms; "
-          f"warmed {len(compiles)} buckets in {sum(compiles.values()):.2f}s")
+          f"warmed {len(compiles)} buckets x{len(engines)} replica(s) in "
+          f"{sum(compiles.values()):.2f}s")
 
     rng = np.random.default_rng(args.seed)
     n = cfg.input_size
@@ -138,9 +163,17 @@ def main(argv=None):
     reqs = [rng.random(shape, dtype=np.float32)
             for _ in range(args.requests)]
 
-    mb = MicroBatcher(engine, max_wait_ms=args.max_wait_ms,
-                      max_queue=args.max_queue or None,
-                      validate=not args.no_validate)
+    if n_replicas:
+        from repro.runtime.fleet import FleetRouter
+
+        mb = FleetRouter(engines, max_queue=args.max_queue or None,
+                         validate=not args.no_validate)
+        print(f"[serve_donn] continuous-batching fleet: "
+              f"{n_replicas} replica(s)")
+    else:
+        mb = MicroBatcher(engine, max_wait_ms=args.max_wait_ms,
+                          max_queue=args.max_queue or None,
+                          validate=not args.no_validate)
     timeout_ms = args.timeout_ms or None
     lat, shed, expired = [], 0, 0
     t0 = time.perf_counter()
@@ -167,9 +200,10 @@ def main(argv=None):
     print(f"[serve_donn] {len(lat)}/{args.requests} requests served in "
           f"{dt:.2f}s ({rps:.1f} req/s; p50 {p50:.1f}ms p99 {p99:.1f}ms; "
           f"shed {shed}, expired {expired}; "
-          f"{engine.stats['batches']} batches, "
-          f"{engine.stats['padded_rows']} padded rows, "
-          f"mesh={args.mesh_devices or 1}, clean_close={clean})")
+          f"{sum(e.stats['batches'] for e in engines)} batches, "
+          f"{sum(e.stats['padded_rows'] for e in engines)} padded rows, "
+          f"mesh={args.mesh_devices or 1}, replicas={n_replicas or 1}, "
+          f"clean_close={clean})")
     return rps
 
 

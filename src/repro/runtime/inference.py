@@ -416,6 +416,36 @@ class InferenceEngine:
         return np.concatenate(outs, axis=0)
 
 
+def expected_request_shape(deployed: DeployedDONN) -> tuple:
+    """Per-request input shape a deployment serves ((C,n,n) for RGB)."""
+    cfg = deployed.cfg
+    n = cfg.input_size
+    if deployed.family == "multi":
+        return (cfg.channels, n, n)
+    return (n, n)
+
+
+def validate_request(deployed: DeployedDONN, x: np.ndarray) -> None:
+    """Admission-time request validation shared by every dispatcher.
+
+    Raises ``TypeError``/``ValueError`` on a request that could poison a
+    batch (wrong dtype kind / per-request shape) — the door check both
+    ``MicroBatcher.submit`` and ``runtime.fleet.FleetRouter.submit`` run.
+    """
+    if not (np.issubdtype(x.dtype, np.floating)
+            or np.issubdtype(x.dtype, np.integer)
+            or np.issubdtype(x.dtype, np.bool_)):
+        raise TypeError(
+            f"request dtype {x.dtype} is not castable to float32"
+        )
+    exp = expected_request_shape(deployed)
+    if x.shape != exp:
+        raise ValueError(
+            f"request shape {x.shape} != expected per-request shape "
+            f"{exp} for the {deployed.family!r} family"
+        )
+
+
 class _Request:
     """One queued inference request (slots: this sits on the hot path)."""
 
@@ -474,25 +504,10 @@ class MicroBatcher:
 
     # --- admission ---
     def _expected_shape(self) -> tuple:
-        cfg = self.engine.deployed.cfg
-        n = cfg.input_size
-        if self.engine.deployed.family == "multi":
-            return (cfg.channels, n, n)
-        return (n, n)
+        return expected_request_shape(self.engine.deployed)
 
     def _validate(self, x: np.ndarray):
-        if not (np.issubdtype(x.dtype, np.floating)
-                or np.issubdtype(x.dtype, np.integer)
-                or np.issubdtype(x.dtype, np.bool_)):
-            raise TypeError(
-                f"request dtype {x.dtype} is not castable to float32"
-            )
-        exp = self._expected_shape()
-        if x.shape != exp:
-            raise ValueError(
-                f"request shape {x.shape} != expected per-request shape "
-                f"{exp} for the {self.engine.deployed.family!r} family"
-            )
+        validate_request(self.engine.deployed, x)
 
     def submit(self, x, timeout_ms: Optional[float] = None) -> Future:
         """Enqueue one request; returns a Future resolving to its output.

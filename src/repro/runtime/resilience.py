@@ -33,6 +33,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import random
 import threading
 import time
 from typing import Optional, Sequence
@@ -58,6 +59,22 @@ class OverloadedError(RuntimeError):
 
 class DeadlineExceededError(TimeoutError):
     """The request's deadline expired before it could be dispatched."""
+
+
+class DrainingError(RuntimeError):
+    """The router is draining (or swapping): no new requests are admitted.
+
+    In-flight and queued requests are still flushed — only *new* admissions
+    are refused, so callers can retry on another fleet or after the swap.
+    """
+
+
+class RetriesExhaustedError(RuntimeError):
+    """A request failed on every retry its budget allowed.
+
+    Raised into the request's own future only — neighbors that shared a
+    failed dispatch group are re-dispatched and served normally.
+    """
 
 
 # --------------------------------------------------------------------------
@@ -148,6 +165,64 @@ def load_deployed(artifact_dir, *, verify: bool = True):
                                                             False)))
 
 
+def validate_artifact(artifact_dir) -> dict:
+    """Pre-deployment artifact check: metadata + architecture, no planes.
+
+    Validates everything that can fail *before* warmup commits compile
+    time — the manifest exists and parses, the format version is one this
+    build reads, the family is known, the architecture spec round-trips
+    through the validated DSL path (``dsl.spec_to_config`` +
+    ``physics.validate_config``, the same checks a build would run) and
+    the plane store has a restorable step.  Raises ``FileNotFoundError`` /
+    ``ValueError`` (incl. ``PhysicsValidationError``) naming the problem;
+    returns the parsed metadata on success.  The frozen planes themselves
+    are *not* deserialized — crc32 verification stays a load-time check.
+    """
+    from repro import checkpoint as ckpt
+    from repro.core import dsl, physics
+
+    artifact_dir = pathlib.Path(artifact_dir)
+    meta_path = artifact_dir / ARTIFACT_FILE
+    if not meta_path.exists():
+        raise FileNotFoundError(
+            f"no {ARTIFACT_FILE} under {artifact_dir} — not a serving "
+            "artifact (or an interrupted save: the manifest commits last)"
+        )
+    try:
+        meta = json.loads(meta_path.read_text())
+    except ValueError as e:
+        raise ValueError(f"unparseable {ARTIFACT_FILE}: {e}") from e
+    if meta.get("format") not in KNOWN_FORMATS:
+        raise ValueError(
+            f"unsupported artifact format {meta.get('format')!r} "
+            f"(this build reads formats {KNOWN_FORMATS})"
+        )
+    if meta.get("family") not in ("cls", "multi", "seg"):
+        raise ValueError(f"unknown model family {meta.get('family')!r}")
+    if meta.get("plane_dtype", "float32") not in ("float32", "bfloat16",
+                                                  "int8"):
+        raise ValueError(
+            f"unknown plane_dtype {meta.get('plane_dtype')!r}"
+        )
+    spec = meta.get("spec")
+    if not isinstance(spec, dict):
+        raise ValueError(f"artifact spec missing/malformed in {meta_path}")
+    try:
+        cfg = dsl.spec_to_config(spec)
+    except (KeyError, TypeError, ValueError) as e:
+        raise ValueError(f"architecture spec does not assemble: {e!r}") from e
+    errors = [v for v in physics.validate_config(cfg)
+              if v.severity == physics.ERROR]
+    if errors:
+        raise physics.PhysicsValidationError(errors)
+    if ckpt.latest_step(artifact_dir / PLANES_DIR) is None:
+        raise ValueError(
+            f"no restorable plane store under {artifact_dir / PLANES_DIR} "
+            "(missing or damaged checkpoint manifests)"
+        )
+    return meta
+
+
 # --------------------------------------------------------------------------
 # Engine supervision
 # --------------------------------------------------------------------------
@@ -166,7 +241,16 @@ class EngineSupervisor:
     - ``health_check()`` pushes a probe batch through the engine and
       updates readiness without touching request stats.
     - ``stats()`` exposes ``ready``, ``restarts``, ``requests``,
-      ``errors`` and ``error_rate`` for balancers / dashboards.
+      ``errors``, ``error_rate`` and the per-attempt ``restart_history``
+      (attempt number + backoff slept) for balancers / dashboards.
+
+    Restarts back off **exponentially with jitter** instead of retrying
+    in a tight loop: attempt k sleeps
+    ``min(backoff_base_ms * 2**(k-1), backoff_max_ms)`` scaled by a
+    uniform ``[1, 1+backoff_jitter]`` factor, so a fleet of supervisors
+    recovering from a shared fault (a bad node, a torn artifact push)
+    doesn't hammer the artifact store in lockstep.  ``backoff_base_ms=0``
+    restores immediate restarts (tests).
 
     ``engine_factory(deployed) -> engine`` customizes engine construction
     (extra buckets, multi-device dispatch, or fault injection in tests).
@@ -175,18 +259,24 @@ class EngineSupervisor:
     def __init__(self, artifact_dir, *, buckets: Optional[Sequence[int]] = None,
                  engine_factory=None, max_restarts: int = 3,
                  warmup_buckets: Optional[Sequence[int]] = None,
-                 verify: bool = True):
+                 verify: bool = True, backoff_base_ms: float = 50.0,
+                 backoff_max_ms: float = 2000.0,
+                 backoff_jitter: float = 0.25, seed: Optional[int] = None):
         self.artifact_dir = pathlib.Path(artifact_dir)
         self.buckets = buckets
         self.engine_factory = engine_factory
         self.max_restarts = int(max_restarts)
         self.warmup_buckets = warmup_buckets
         self.verify = verify
+        self.backoff_base_ms = float(backoff_base_ms)
+        self.backoff_max_ms = float(backoff_max_ms)
+        self.backoff_jitter = float(backoff_jitter)
+        self._rng = random.Random(seed)
         self.engine = None
         self._ready = False
         self._lock = threading.Lock()
         self._stats = {"requests": 0, "errors": 0, "restarts": 0,
-                       "last_start_s": None}
+                       "last_start_s": None, "restart_history": []}
 
     # --- lifecycle ---
     def _build_engine(self):
@@ -213,8 +303,20 @@ class EngineSupervisor:
                 self._ready = True
         return self
 
+    def restart_backoff_s(self, attempt: int) -> float:
+        """Backoff before restart ``attempt`` (1-indexed): exp + jitter."""
+        if self.backoff_base_ms <= 0:
+            return 0.0
+        base = min(self.backoff_base_ms * 2.0 ** (attempt - 1),
+                   self.backoff_max_ms)
+        return base * (1.0 + self.backoff_jitter * self._rng.random()) / 1e3
+
     def restart(self):
-        """Tear down the engine and rebuild it from the artifact."""
+        """Tear down the engine and rebuild it from the artifact.
+
+        Each attempt sleeps its exponential backoff first (see the class
+        docstring) and is recorded in ``stats()["restart_history"]``.
+        """
         with self._lock:
             if self._stats["restarts"] >= self.max_restarts:
                 self._ready = False
@@ -223,10 +325,18 @@ class EngineSupervisor:
                     f"({self.max_restarts} restarts)"
                 )
             self._stats["restarts"] += 1
+            attempt = self._stats["restarts"]
             self._ready = False
+            backoff_s = self.restart_backoff_s(attempt)
+            if backoff_s > 0:
+                time.sleep(backoff_s)
             t0 = time.perf_counter()
             self.engine = self._build_engine()
             self._stats["last_start_s"] = time.perf_counter() - t0
+            self._stats["restart_history"].append(
+                {"attempt": attempt, "backoff_s": round(backoff_s, 4),
+                 "rebuild_s": round(self._stats["last_start_s"], 4)}
+            )
             self._ready = True
         return self
 
@@ -273,6 +383,7 @@ class EngineSupervisor:
 
     def stats(self) -> dict:
         s = dict(self._stats)
+        s["restart_history"] = list(s["restart_history"])
         s["ready"] = self.ready
         s["error_rate"] = s["errors"] / max(s["requests"], 1)
         return s

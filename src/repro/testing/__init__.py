@@ -6,19 +6,23 @@ drills can use the same injectors the tests do), but nothing in the
 serving or training hot paths imports it.
 """
 from repro.testing.faults import (
+    CrashingEngine,
     FlakyEngine,
     SlowEngine,
     corrupt_chunk,
     flip_crc,
+    kill_replica,
     perturb_frozen,
     poison_batches,
 )
 
 __all__ = [
+    "CrashingEngine",
     "FlakyEngine",
     "SlowEngine",
     "corrupt_chunk",
     "flip_crc",
+    "kill_replica",
     "perturb_frozen",
     "poison_batches",
 ]

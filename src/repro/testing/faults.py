@@ -9,6 +9,10 @@ covering the failure modes a deployed DONN actually faces:
   ``kill()`` (crashed-replica scenario for ``EngineSupervisor``);
 - ``SlowEngine`` — engine proxy that stalls each call (deadline-expiry
   scenario for ``MicroBatcher.submit(timeout_ms=...)``);
+- ``CrashingEngine`` — engine proxy that dies permanently after K
+  requests, optionally only once a drain begins (mid-run replica-crash
+  scenario for ``FleetRouter``); ``kill_replica`` kills the first live
+  crashable replica of a running fleet;
 - ``corrupt_chunk`` / ``flip_crc`` — bit-rot a checkpoint chunk file /
   falsify its manifest checksum (restore-time integrity scenario);
 - ``poison_batches`` — inject NaN batches into a training stream
@@ -65,6 +69,76 @@ class FlakyEngine:
 
     def __getattr__(self, name):
         return getattr(self._engine, name)
+
+
+class CrashingEngine:
+    """Engine proxy that dies permanently after ``crash_after`` requests.
+
+    Unlike ``FlakyEngine`` (which fails selected calls and then recovers),
+    a crashed replica stays down until something external rebuilds it —
+    the mid-run replica-crash scenario for ``FleetRouter``: every request
+    in flight on this replica must be retried on a healthy one, with zero
+    drops.  With ``crash_on_drain=True`` the countdown only starts once
+    ``arm()`` is called (the fleet bench arms it as the drain begins, so
+    the crash lands during the flush).  ``kill()`` crashes it immediately.
+    """
+
+    def __init__(self, engine, crash_after: int = 1,
+                 crash_on_drain: bool = False, exc_type=RuntimeError):
+        self._engine = engine
+        self.crash_after = int(crash_after)
+        self.crash_on_drain = bool(crash_on_drain)
+        self.exc_type = exc_type
+        self.calls = 0
+        self.armed = not crash_on_drain
+        self.dead = False
+
+    def arm(self):
+        """Start the crash countdown (drain has begun)."""
+        self.armed = True
+        self.calls = 0
+
+    def kill(self):
+        """Crash immediately and stay down."""
+        self.dead = True
+
+    def infer(self, x):
+        if self.dead:
+            raise self.exc_type("replica crashed (stays down)")
+        if self.armed:
+            self.calls += 1
+            if self.calls > self.crash_after:
+                self.dead = True
+                raise self.exc_type(
+                    f"replica crashed after {self.crash_after} request(s)"
+                )
+        return self._engine.infer(x)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
+def kill_replica(router, index: Optional[int] = None):
+    """Kill one replica of a live fleet; returns the killed engine proxy.
+
+    Picks replica ``index`` (default: the first whose engine exposes
+    ``kill()`` and is not already dead) and crashes it in place — the
+    mid-run fleet failover scenario.  Raises ``ValueError`` when no
+    replica is killable.
+    """
+    reps = router.replicas
+    if index is not None:
+        candidates = [reps[index]]
+    else:
+        candidates = [r for r in reps
+                      if hasattr(r.engine, "kill")
+                      and not getattr(r.engine, "dead", False)]
+    for rep in candidates:
+        if hasattr(rep.engine, "kill"):
+            rep.engine.kill()
+            return rep.engine
+    raise ValueError("no killable replica (wrap engines in FlakyEngine / "
+                     "CrashingEngine to enable kill_replica)")
 
 
 class SlowEngine:

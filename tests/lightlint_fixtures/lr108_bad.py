@@ -1,0 +1,19 @@
+"""LR108 bad: while-True retry loops that swallow failures unpaced."""
+import queue
+
+
+def serve_forever(engine, work: queue.Queue):
+    while True:
+        group = work.get()
+        try:
+            engine.infer(group)
+        except Exception:
+            work.put(group)  # requeue and spin: no budget, no backoff
+
+
+def restart_until_up(supervisor):
+    while True:
+        try:
+            supervisor.restart()
+        except Exception:
+            continue  # tight restart spin against a dead artifact

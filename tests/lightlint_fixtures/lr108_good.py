@@ -1,0 +1,38 @@
+"""LR108 good: bounded or paced retry loops."""
+import queue
+import time
+
+
+def serve_with_backoff(engine, work: queue.Queue):
+    while True:
+        group = work.get()
+        try:
+            engine.infer(group)
+        except Exception:
+            _backoff_and_requeue(work, group)  # exponential backoff inside
+
+
+def _backoff_and_requeue(work, group):
+    time.sleep(0.05)
+    work.put(group)
+
+
+def restart_with_budget(supervisor, max_restarts: int = 3):
+    attempts = 0
+    while True:
+        try:
+            supervisor.restart()
+            return
+        except Exception:
+            attempts += 1
+            if attempts > max_restarts:
+                raise  # budget exhausted: the failure propagates
+
+
+def paced_poll(cv, pending):
+    while True:
+        with cv:
+            try:
+                return pending.pop(0)
+            except IndexError:
+                cv.wait(timeout=0.1)  # paced, not a busy-spin

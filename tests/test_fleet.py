@@ -1,0 +1,526 @@
+"""Continuous-batching fleet suite (ISSUE-9): admission + failover drills.
+
+Pins the ``runtime.fleet`` contracts on top of the PR-7 resilience layer:
+
+- **continuous admission**: an idle fleet dispatches immediately
+  (batch 1); arrivals during an in-flight batch coalesce into the open
+  slot and ride the next free replica as one group; submit-during-drain
+  is rejected with the typed ``DrainingError``; a deadline that expires
+  while the request is still queued in an open slot fails only that
+  future with ``DeadlineExceededError``;
+- **failover, zero drops**: a mid-run replica kill re-serves its
+  in-flight group on a healthy replica **bit-identically**; N-1 dead
+  replicas still serve everything; a poison request isolates via group
+  splits and exhausts only its *own* retry budget
+  (``RetriesExhaustedError``) while its group-mates are served;
+- **drain + warm swap**: ``drain()`` flushes every queued request,
+  ``swap_artifact`` validates the new artifact first, rolls replicas one
+  at a time under live traffic, and drops nothing;
+- **supervisor backoff** (satellite): ``EngineSupervisor.restart``
+  sleeps an exponential backoff with jitter and records attempt/backoff
+  history in ``stats()``.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DONNConfig, build_model
+from repro.runtime.fleet import ContinuousBatcher, FleetRouter
+from repro.runtime.inference import InferenceEngine, freeze
+from repro.runtime.resilience import (
+    ARTIFACT_FILE, DeadlineExceededError, DrainingError, EngineSupervisor,
+    OverloadedError, RetriesExhaustedError, save_deployed, validate_artifact,
+)
+from repro.testing import CrashingEngine, FlakyEngine, kill_replica
+
+
+def _digits(b, shape=(28, 28), seed=0):
+    return np.random.default_rng(seed).random((b,) + shape, np.float32)
+
+
+def _model(seed=0, **kw):
+    kw.setdefault("n", 32)
+    kw.setdefault("depth", 2)
+    kw.setdefault("distance", 0.05)
+    kw.setdefault("det_size", 6)
+    kw.setdefault("name", "fleet")
+    cfg = DONNConfig(**kw)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+class FakeEngine:
+    """Engine-like double: deterministic row sums, optional stall."""
+
+    buckets = (1, 2, 4, 8)
+    deployed = None
+
+    def __init__(self, delay_s=0.0):
+        self.delay_s = delay_s
+        self.group_sizes = []
+
+    def infer(self, x):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self.group_sizes.append(int(x.shape[0]))
+        return np.sum(np.asarray(x), axis=(1, 2))[:, None]
+
+
+class PoisonEngine(FakeEngine):
+    """Fails any group containing the poison marker value."""
+
+    MARKER = -777.0
+
+    def infer(self, x):
+        if np.any(np.asarray(x) == self.MARKER):
+            raise RuntimeError("poison request in group")
+        return super().infer(x)
+
+
+def _submit_all(router, xs, timeout_ms=None):
+    return [router.submit(x, timeout_ms=timeout_ms) for x in xs]
+
+
+def _results(futs, timeout=30):
+    return [f.result(timeout=timeout) for f in futs]
+
+
+# --------------------------------------------------------------------------
+# Continuous admission
+# --------------------------------------------------------------------------
+class TestContinuousAdmission:
+    def test_idle_engine_dispatches_immediately(self):
+        eng = FakeEngine()
+        cb = ContinuousBatcher(eng, validate=False)
+        try:
+            f = cb.submit(np.ones((4, 4), np.float32))
+            assert np.allclose(f.result(timeout=10), 16.0)
+            # no deadline was waited out: the first dispatch is batch 1
+            assert eng.group_sizes[0] == 1
+        finally:
+            assert cb.close()
+
+    def test_arrivals_coalesce_into_open_slot(self):
+        eng = FakeEngine(delay_s=0.15)
+        cb = ContinuousBatcher(eng, validate=False)
+        try:
+            first = cb.submit(np.zeros((4, 4), np.float32))
+            time.sleep(0.05)  # first is in flight; these join the open slot
+            rest = _submit_all(
+                cb, [np.full((4, 4), i, np.float32) for i in range(1, 5)]
+            )
+            outs = _results([first] + rest)
+            assert all(np.allclose(o, 16.0 * i) for i, o in enumerate(outs))
+            # the 4 arrivals rode the next dispatch as one group
+            assert eng.group_sizes == [1, 4]
+        finally:
+            cb.close()
+
+    def test_groups_respect_bucket_max(self):
+        eng = FakeEngine(delay_s=0.1)
+        cb = ContinuousBatcher(eng, validate=False)
+        try:
+            first = cb.submit(np.zeros((4, 4), np.float32))
+            time.sleep(0.03)
+            rest = _submit_all(
+                cb, [np.zeros((4, 4), np.float32) for _ in range(12)]
+            )
+            _results([first] + rest)
+            assert all(g <= max(eng.buckets) for g in eng.group_sizes)
+        finally:
+            cb.close()
+
+    def test_submit_during_drain_typed_rejection(self):
+        eng = FakeEngine(delay_s=0.05)
+        cb = ContinuousBatcher(eng, validate=False)
+        try:
+            futs = _submit_all(
+                cb, [np.zeros((4, 4), np.float32) for _ in range(6)]
+            )
+            done = threading.Event()
+            drained = {}
+
+            def drain():
+                drained["ok"] = cb.drain(timeout=20)
+                done.set()
+
+            threading.Thread(target=drain, daemon=True).start()
+            time.sleep(0.01)
+            with pytest.raises(DrainingError):
+                cb.submit(np.zeros((4, 4), np.float32))
+            assert done.wait(20) and drained["ok"]
+            # the drain flushed everything already admitted: zero drops
+            _results(futs)
+            assert cb.stats()["rejected_draining"] == 1
+            cb.resume()
+            f = cb.submit(np.ones((4, 4), np.float32))
+            assert np.allclose(f.result(timeout=10), 16.0)
+        finally:
+            cb.close()
+
+    def test_deadline_expiry_while_queued_in_open_slot(self):
+        eng = FakeEngine(delay_s=0.4)
+        cb = ContinuousBatcher(eng, validate=False)
+        try:
+            blocker = cb.submit(np.zeros((4, 4), np.float32))
+            time.sleep(0.1)  # blocker dispatched; the engine is busy
+            doomed = cb.submit(np.ones((4, 4), np.float32), timeout_ms=50)
+            ok = cb.submit(np.full((4, 4), 2.0, np.float32))
+            with pytest.raises(DeadlineExceededError):
+                doomed.result(timeout=10)
+            # only the expired future failed; its slot-mates are served
+            assert np.allclose(ok.result(timeout=10), 32.0)
+            assert np.allclose(blocker.result(timeout=10), 0.0)
+            assert cb.stats()["expired"] == 1
+        finally:
+            cb.close()
+
+    def test_admission_bound_sheds_typed(self):
+        eng = FakeEngine(delay_s=0.2)
+        cb = ContinuousBatcher(eng, validate=False, max_queue=2)
+        try:
+            first = cb.submit(np.zeros((4, 4), np.float32))
+            time.sleep(0.05)
+            kept = _submit_all(
+                cb, [np.zeros((4, 4), np.float32) for _ in range(2)]
+            )
+            with pytest.raises(OverloadedError):
+                cb.submit(np.zeros((4, 4), np.float32))
+            _results([first] + kept)
+            assert cb.stats()["shed"] == 1
+        finally:
+            cb.close()
+
+    def test_request_validation_at_the_door(self):
+        model, params = _model()
+        dep = freeze(model, params)
+        cb = ContinuousBatcher(InferenceEngine(dep, buckets=(1, 2)))
+        try:
+            with pytest.raises(ValueError):
+                cb.submit(np.zeros((3, 3), np.float32))
+            with pytest.raises(TypeError):
+                cb.submit(np.zeros((28, 28), dtype="U4"))
+        finally:
+            cb.close()
+
+
+# --------------------------------------------------------------------------
+# Fleet failover
+# --------------------------------------------------------------------------
+class TestFleetFailover:
+    def test_midrun_kill_zero_drops_bit_identical(self):
+        model, params = _model()
+        dep = freeze(model, params)
+        xs = _digits(24)
+        ref = InferenceEngine(dep, buckets=(8,)).infer(xs)
+        mk = lambda: FlakyEngine(
+            InferenceEngine(dep, buckets=(8,)))  # noqa: E731
+        router = FleetRouter([mk(), mk()], seed=3,
+                             backoff_base_ms=1.0)
+        try:
+            futs = _submit_all(router, list(xs))
+            kill_replica(router)  # mid-run crash: stays down
+            outs = np.stack(_results(futs))
+            np.testing.assert_array_equal(outs, ref)
+            s = router.stats()
+            assert s["served"] == 24 and s["failed"] == 0
+        finally:
+            router.close()
+
+    def test_n_minus_1_failures_still_serve(self):
+        engines = [CrashingEngine(FakeEngine(), crash_after=0)
+                   for _ in range(2)] + [FakeEngine()]
+        router = FleetRouter(engines, seed=1, backoff_base_ms=1.0,
+                             validate=False)
+        try:
+            futs = _submit_all(
+                router,
+                [np.full((4, 4), i, np.float32) for i in range(16)],
+            )
+            outs = _results(futs)
+            assert all(np.allclose(o, 16.0 * i) for i, o in enumerate(outs))
+            s = router.stats()
+            assert s["failed"] == 0
+            assert s["replica_failures"] >= 1  # the dead replicas were hit
+        finally:
+            router.close()
+
+    def test_poison_request_fails_alone(self):
+        eng = PoisonEngine(delay_s=0.1)
+        router = FleetRouter([eng], seed=2, max_retries=1,
+                             backoff_base_ms=1.0, validate=False)
+        try:
+            # occupy the replica so poison + mates coalesce into one group
+            blocker = router.submit(np.zeros((4, 4), np.float32))
+            time.sleep(0.03)
+            good = [np.full((4, 4), i, np.float32) for i in range(1, 6)]
+            poison = np.full((4, 4), PoisonEngine.MARKER, np.float32)
+            futs = _submit_all(router, good[:2] + [poison] + good[2:])
+            bad_fut = futs[2]
+            assert np.allclose(blocker.result(timeout=30), 0.0)
+            with pytest.raises(RetriesExhaustedError):
+                bad_fut.result(timeout=30)
+            others = [f.result(timeout=30)
+                      for i, f in enumerate(futs) if i != 2]
+            expect = [16.0 * i for i in range(1, 6)]
+            assert all(np.allclose(o, e) for o, e in zip(others, expect))
+            s = router.stats()
+            assert s["failed"] == 1 and s["served"] == 6
+            assert s["splits"] >= 1  # the poison isolated via group splits
+        finally:
+            router.close()
+
+    def test_retry_exhaustion_is_typed_and_bounded(self):
+        dead = CrashingEngine(FakeEngine(), crash_after=0)
+        router = FleetRouter([dead], max_retries=2, backoff_base_ms=1.0,
+                             seed=4, validate=False)
+        try:
+            f = router.submit(np.zeros((4, 4), np.float32))
+            with pytest.raises(RetriesExhaustedError):
+                f.result(timeout=30)
+            s = router.stats()
+            # 1 initial dispatch + max_retries retries, then a typed fail
+            assert s["failed"] == 1
+            assert s["replica_failures"] == 3
+        finally:
+            router.close()
+
+    def test_least_loaded_placement_spreads_over_idle_replicas(self):
+        e1, e2 = FakeEngine(delay_s=0.05), FakeEngine(delay_s=0.05)
+        router = FleetRouter([e1, e2], validate=False)
+        try:
+            # more than one bucket's worth: the overflow group must land
+            # on the other idle replica, not queue behind the first
+            futs = _submit_all(
+                router, [np.zeros((4, 4), np.float32) for _ in range(16)]
+            )
+            _results(futs)
+            assert e1.group_sizes and e2.group_sizes  # both replicas served
+        finally:
+            router.close()
+
+    def test_unclean_close_fails_stranded_futures(self):
+        dead = CrashingEngine(FakeEngine(), crash_after=0)
+        router = FleetRouter([dead], max_retries=50,
+                             backoff_base_ms=200.0, backoff_max_ms=5000.0,
+                             seed=5, validate=False)
+        f = router.submit(np.zeros((4, 4), np.float32))
+        assert not router.close(timeout=0.3)
+        with pytest.raises(RuntimeError):
+            f.result(timeout=10)
+
+
+# --------------------------------------------------------------------------
+# Drain + warm swap from artifacts
+# --------------------------------------------------------------------------
+class TestDrainAndSwap:
+    def _two_artifacts(self, tmp_path):
+        model, p0 = _model(seed=0)
+        _, p1 = _model(seed=1)
+        d0, d1 = freeze(model, p0), freeze(model, p1)
+        a0, a1 = tmp_path / "art0", tmp_path / "art1"
+        save_deployed(d0, a0)
+        save_deployed(d1, a1)
+        return d0, d1, a0, a1
+
+    def test_from_artifact_serves_and_swaps_zero_drops(self, tmp_path):
+        d0, d1, a0, a1 = self._two_artifacts(tmp_path)
+        xs = _digits(8)
+        ref0 = InferenceEngine(d0, buckets=(8,)).infer(xs)
+        ref1 = InferenceEngine(d1, buckets=(8,)).infer(xs)
+        assert not np.array_equal(ref0, ref1)  # the swap is observable
+        # single serving bucket: every group pads to the same compiled
+        # program, so per-row outputs are bit-comparable to the reference
+        router = FleetRouter.from_artifact(a0, replicas=2, buckets=(8,))
+        try:
+            np.testing.assert_array_equal(
+                np.stack(_results(_submit_all(router, list(xs)))), ref0
+            )
+            stop = threading.Event()
+            live, errs = [], []
+
+            def pump():
+                while not stop.is_set():
+                    try:
+                        live.append(router.submit(xs[0]))
+                    except DrainingError:
+                        errs.append("draining")  # rolling swap never drains
+                    time.sleep(0.002)
+
+            t = threading.Thread(target=pump, daemon=True)
+            t.start()
+            meta = router.swap_artifact(a1, rolling=True)
+            stop.set()
+            t.join(timeout=10)
+            assert meta["format"] >= 2 and not errs
+            outs = _results(live)
+            # every in-swap request was served by exactly one of the two
+            # models — zero drops, no torn outputs
+            for o in outs:
+                assert (np.array_equal(o, ref0[0])
+                        or np.array_equal(o, ref1[0]))
+            np.testing.assert_array_equal(
+                np.stack(_results(_submit_all(router, list(xs)))), ref1
+            )
+            assert router.stats()["failed"] == 0
+            assert router.stats()["swaps"] == 1
+        finally:
+            router.close()
+
+    def test_swap_validates_before_touching_replicas(self, tmp_path):
+        d0, _, a0, _ = self._two_artifacts(tmp_path)
+        router = FleetRouter.from_artifact(a0, replicas=1, buckets=(1, 4))
+        try:
+            bad = tmp_path / "nonsense"
+            bad.mkdir()
+            with pytest.raises(FileNotFoundError):
+                router.swap_artifact(bad)
+            # fleet still serves the old model untouched
+            x = _digits(1)[0]
+            ref = InferenceEngine(d0, buckets=(1,)).infer(x[None])[0]
+            np.testing.assert_array_equal(
+                router.submit(x).result(timeout=30), ref
+            )
+        finally:
+            router.close()
+
+    def test_swap_requires_build_factories(self, tmp_path):
+        d0, _, a0, _ = self._two_artifacts(tmp_path)
+        router = FleetRouter([FakeEngine()], validate=False)
+        try:
+            with pytest.raises(RuntimeError, match="build factory"):
+                router.swap_artifact(a0)
+        finally:
+            router.close()
+
+    def test_nonrolling_swap_drains_then_resumes(self, tmp_path):
+        _, d1, a0, a1 = self._two_artifacts(tmp_path)
+        router = FleetRouter.from_artifact(a0, replicas=1, buckets=(1, 4))
+        try:
+            router.swap_artifact(a1, rolling=False)
+            assert not router.draining  # admission reopened
+            x = _digits(1)[0]
+            ref = InferenceEngine(d1, buckets=(1,)).infer(x[None])[0]
+            np.testing.assert_array_equal(
+                router.submit(x).result(timeout=30), ref
+            )
+        finally:
+            router.close()
+
+
+# --------------------------------------------------------------------------
+# Artifact pre-validation (satellite: serve_donn --artifact)
+# --------------------------------------------------------------------------
+class TestValidateArtifact:
+    def test_good_artifact_passes(self, tmp_path):
+        model, params = _model()
+        save_deployed(freeze(model, params), tmp_path)
+        meta = validate_artifact(tmp_path)
+        assert meta["family"] == "cls"
+
+    def test_missing_dir_and_manifest(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            validate_artifact(tmp_path / "nope")
+        (tmp_path / "empty").mkdir()
+        with pytest.raises(FileNotFoundError):
+            validate_artifact(tmp_path / "empty")
+
+    def test_unknown_format_rejected(self, tmp_path):
+        import json
+
+        model, params = _model()
+        save_deployed(freeze(model, params), tmp_path)
+        mpath = tmp_path / ARTIFACT_FILE
+        meta = json.loads(mpath.read_text())
+        meta["format"] = 99
+        mpath.write_text(json.dumps(meta))
+        with pytest.raises(ValueError, match="format"):
+            validate_artifact(tmp_path)
+
+    def test_broken_spec_rejected(self, tmp_path):
+        import json
+
+        model, params = _model()
+        save_deployed(freeze(model, params), tmp_path)
+        mpath = tmp_path / ARTIFACT_FILE
+        meta = json.loads(mpath.read_text())
+        meta["spec"]["n"] = -4
+        mpath.write_text(json.dumps(meta))
+        with pytest.raises(ValueError):
+            validate_artifact(tmp_path)
+
+
+# --------------------------------------------------------------------------
+# Supervisor restart backoff (satellite)
+# --------------------------------------------------------------------------
+class TestSupervisorBackoff:
+    def test_backoff_schedule_exponential_capped(self):
+        sup = EngineSupervisor("/nonexistent", backoff_base_ms=10.0,
+                               backoff_max_ms=40.0, backoff_jitter=0.0,
+                               seed=0)
+        waits = [sup.restart_backoff_s(a) for a in (1, 2, 3, 4, 5)]
+        assert waits == [0.01, 0.02, 0.04, 0.04, 0.04]
+        jittered = EngineSupervisor("/nonexistent", backoff_base_ms=10.0,
+                                    backoff_jitter=0.5, seed=0)
+        w = jittered.restart_backoff_s(1)
+        assert 0.01 <= w <= 0.015
+
+    def test_restart_records_history(self, tmp_path):
+        model, params = _model()
+        save_deployed(freeze(model, params), tmp_path)
+        engines = []
+
+        def factory(deployed):
+            eng = FlakyEngine(InferenceEngine(deployed, buckets=(1,)))
+            engines.append(eng)
+            return eng
+
+        sup = EngineSupervisor(tmp_path, engine_factory=factory,
+                               max_restarts=2, backoff_base_ms=1.0,
+                               seed=0).start()
+        engines[-1].kill()
+        sup.infer(_digits(1)[0])  # restart + retry succeeds
+        hist = sup.stats()["restart_history"]
+        assert len(hist) == 1
+        assert hist[0]["attempt"] == 1
+        assert hist[0]["backoff_s"] >= 0.001
+        assert hist[0]["rebuild_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# Fault injectors (satellite: CrashingEngine / kill_replica)
+# --------------------------------------------------------------------------
+class TestCrashInjectors:
+    def test_crashing_engine_dies_after_k_and_stays_dead(self):
+        eng = CrashingEngine(FakeEngine(), crash_after=2)
+        x = np.zeros((1, 4, 4), np.float32)
+        eng.infer(x)
+        eng.infer(x)
+        with pytest.raises(RuntimeError):
+            eng.infer(x)
+        with pytest.raises(RuntimeError):
+            eng.infer(x)  # permanently down, unlike FlakyEngine
+
+    def test_crash_on_drain_arms_lazily(self):
+        eng = CrashingEngine(FakeEngine(), crash_after=1,
+                             crash_on_drain=True)
+        x = np.zeros((1, 4, 4), np.float32)
+        for _ in range(5):
+            eng.infer(x)  # unarmed: unlimited calls
+        eng.arm()
+        eng.infer(x)
+        with pytest.raises(RuntimeError):
+            eng.infer(x)
+
+    def test_kill_replica_picks_first_killable(self):
+        killable = FlakyEngine(FakeEngine())
+        router = FleetRouter([FakeEngine(), killable], validate=False)
+        try:
+            assert kill_replica(router) is killable
+            with pytest.raises(ValueError):
+                kill_replica(router)  # no live killable replica left
+        finally:
+            router.close()

@@ -119,6 +119,19 @@ class TestComplexPromotionInHotPath:
         assert lint_fixture("lr107_good.py") == []
 
 
+# ---------------------------------------------------------------- LR108
+class TestUnboundedRetryLoop:
+    def test_fires_on_unpaced_swallowing_retry_loops(self):
+        findings = lint_fixture("lr108_bad.py")
+        assert rule_ids(findings) == {"LR108"}
+        # both the requeue-spin and the restart-spin fire
+        assert len(findings) == 2
+        assert all("budget or backoff" in f.message for f in findings)
+
+    def test_silent_on_bounded_or_paced_retries(self):
+        assert lint_fixture("lr108_good.py") == []
+
+
 # ---------------------------------------------------------------- LR201
 class TestPhysicsConfigValidity:
     def test_fires_on_invalid_literal_configs(self):

@@ -46,6 +46,24 @@ def _resilience_headline(meta: dict) -> str:
     return ", ".join(parts)
 
 
+def _serving_fleet_headline(meta: dict) -> str:
+    """Latency-under-load + fault outcomes, not a speedup suite."""
+    s = meta.get("summary", {})
+    parts = []
+    r2 = s.get("poisson", {}).get("r2", {})
+    if isinstance(r2.get("p50_ms"), (int, float)):
+        parts.append(f"p50 {r2['p50_ms']:g}ms / p99 {r2['p99_ms']:g}ms (r2)")
+    win = s.get("continuous_vs_deadline", {}).get("p50_win")
+    if isinstance(win, (int, float)):
+        parts.append(f"continuous {win:g}x vs deadline")
+    fk = s.get("failover_kill", {})
+    if fk.get("dropped") == 0:
+        parts.append("kill: 0 dropped")
+    if s.get("drain_swap", {}).get("dropped") == 0:
+        parts.append("swap: 0 dropped")
+    return ", ".join(parts)
+
+
 def _roofline_headline(meta: dict) -> str:
     """Peak fraction + binding roof per measured cell."""
     parts = []
@@ -76,6 +94,9 @@ HEADLINES = {
     "resilience": (
         "7", _resilience_headline,
         "overload shedding, artifact cold-start, phase-noise robustness"),
+    "serving_fleet": (
+        "9", _serving_fleet_headline,
+        "continuous-batching fleet: Poisson latency, failover, warm swap"),
     "kernel_breakdown": (
         "8", lambda m: _fmt_map(_pick(m), "x"),
         "per-operator batched-jit vs per-sample numpy (Fig. 9)"),
@@ -130,10 +151,56 @@ def render_plane_dtype(summary_path: pathlib.Path) -> str:
     return "\n".join(lines) if len(lines) > 2 else ""
 
 
+def render_serving_fleet(summary_path: pathlib.Path) -> str:
+    """Latency-under-load table (scenario x p50/p99/outcome)."""
+    summary = json.loads(summary_path.read_text())
+    s = summary.get("serving_fleet", {}).get("meta", {}).get("summary", {})
+    if not s:
+        return ""
+    inf = (summary.get("inference_throughput", {}).get("meta", {})
+           .get("speedups", {}).get("latency_under_load", {}))
+    lines = [
+        "| scenario | p50 | p99 | outcome |",
+        "|----------|-----|-----|---------|",
+    ]
+
+    def add(label, cell, outcome):
+        p50, p99 = cell.get("p50_ms"), cell.get("p99_ms")
+        if not isinstance(p50, (int, float)):
+            return
+        lines.append(f"| {label} | {p50:g}ms | {p99:g}ms | {outcome} |")
+
+    if inf:
+        add(f"50% util, 1 replica ({inf.get('rate_hz', '?'):g} req/s)",
+            inf, "open-loop Poisson baseline")
+    add("Poisson, 1 replica", s.get("poisson", {}).get("r1", {}), "healthy")
+    add("Poisson, 2 replicas", s.get("poisson", {}).get("r2", {}), "healthy")
+    cvd = s.get("continuous_vs_deadline", {})
+    if isinstance(cvd.get("p50_continuous_ms"), (int, float)):
+        lines.append(
+            f"| continuous vs deadline batching "
+            f"| {cvd['p50_continuous_ms']:g}ms vs "
+            f"{cvd['p50_deadline_ms']:g}ms | — "
+            f"| p50 win {cvd.get('p50_win', '?'):g}x |")
+    fk = s.get("failover_kill", {})
+    add("mid-run replica kill", fk,
+        f"{fk.get('dropped', '?')} dropped, bit-identical retries")
+    add("1 slow replica (25ms stall)", s.get("slow_replica", {}),
+        "probation keeps the tail")
+    ds = s.get("drain_swap", {})
+    if isinstance(ds.get("swap_ms"), (int, float)):
+        lines.append(
+            f"| drain + rolling warm swap | swap {ds['swap_ms']:g}ms | — "
+            f"| {ds.get('dropped', '?')} dropped, no admission gap |")
+    return "\n".join(lines) if len(lines) > 2 else ""
+
+
 START = "<!-- bench-table:start -->"
 END = "<!-- bench-table:end -->"
 PD_START = "<!-- plane-dtype-table:start -->"
 PD_END = "<!-- plane-dtype-table:end -->"
+FLEET_START = "<!-- serving-fleet-table:start -->"
+FLEET_END = "<!-- serving-fleet-table:end -->"
 
 
 def inject_readme(table: str, readme: pathlib.Path,
@@ -153,15 +220,20 @@ def main() -> None:
     path = pathlib.Path(args[0]) if args else REPO / "BENCH_summary.json"
     table = render(path)
     pd_table = render_plane_dtype(path)
+    fleet_table = render_serving_fleet(path)
     if "--write-readme" in sys.argv:
         inject_readme(table, REPO / "README.md")
         if pd_table:
             inject_readme(pd_table, REPO / "README.md", PD_START, PD_END)
+        if fleet_table:
+            inject_readme(fleet_table, REPO / "README.md",
+                          FLEET_START, FLEET_END)
     else:
         print(table)
-        if pd_table:
-            print()
-            print(pd_table)
+        for t in (pd_table, fleet_table):
+            if t:
+                print()
+                print(t)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from lightlint.rules.physics_rules import (
     PhysicsConfigValidity,
     SpecArtifactValidity,
 )
+from lightlint.rules.runtime_rules import UnboundedRetryLoop
 
 ALL_RULES = (
     CacheKeyCompleteness,  # LR101
@@ -22,6 +23,7 @@ ALL_RULES = (
     ClosureRetraceHazard,  # LR105
     Bf16Accumulation,  # LR106
     ComplexPromotionInHotPath,  # LR107
+    UnboundedRetryLoop,  # LR108
     PhysicsConfigValidity,  # LR201
     SpecArtifactValidity,  # LR202
 )

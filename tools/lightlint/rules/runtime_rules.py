@@ -1,0 +1,97 @@
+"""Runtime-robustness rules (LR108+).
+
+Serving-loop hazards rather than JAX-correctness ones: the fleet /
+supervisor layer (``repro.runtime``) retries failed work by contract
+with a bounded budget and exponential backoff, and a bare ``while True``
+that swallows exceptions undoes both — a dead replica turns into a
+busy-spin that pins a core and retries a poisoned request forever.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from lightlint.core import ERROR, FileContext, Finding, Rule
+from lightlint.rules.jax_rules import call_name
+
+
+def _is_true_const(node) -> bool:
+    return isinstance(node, ast.Constant) and node.value is True
+
+
+def _walk_no_defs(node):
+    """Walk without descending into nested function/class definitions."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+# a call whose name carries one of these is treated as pacing/backoff:
+# time.sleep, self._backoff_and_requeue, cv.wait / wait_for, ...
+_PACING_MARKERS = ("sleep", "backoff", "wait")
+
+
+def _has_pacing_call(node) -> bool:
+    for n in _walk_no_defs(node):
+        if isinstance(n, ast.Call):
+            tail = (call_name(n) or "").split(".")[-1].lower()
+            if any(m in tail for m in _PACING_MARKERS):
+                return True
+    return False
+
+
+def _handler_swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the except body neither re-raises nor exits the loop."""
+    for n in handler.body:
+        for m in [n, *_walk_no_defs(n)]:
+            if isinstance(m, (ast.Raise, ast.Break, ast.Return)):
+                return False
+    return True
+
+
+class UnboundedRetryLoop(Rule):
+    """LR108: ``while True`` retry loop without a budget or backoff.
+
+    A ``while True:`` loop whose ``try/except`` swallows the failure
+    (no ``raise``/``break``/``return`` in the handler) and whose body
+    never paces itself (no ``sleep``/``backoff``/``wait``-named call in
+    the loop) retries a persistent failure as fast as the CPU allows:
+    a crashed replica becomes a busy-spin, a poisoned request is
+    redispatched forever, and the error budget the serving contract
+    promises (``max_retries`` + exponential backoff with jitter, see
+    ``runtime/fleet.py``) silently never engages.  Either bound the
+    attempts and re-raise on exhaustion, or route the failure through a
+    backoff helper (a call with ``sleep``/``backoff``/``wait`` in its
+    name satisfies the rule).
+    """
+
+    rule_id = "LR108"
+    title = "unbounded while-True retry loop"
+    severity = ERROR
+
+    def visit(self, tree: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.While)
+                    and _is_true_const(node.test)):
+                continue
+            if _has_pacing_call(node):
+                continue
+            for n in _walk_no_defs(node):
+                if not isinstance(n, ast.Try):
+                    continue
+                swallowing = [h for h in n.handlers if _handler_swallows(h)]
+                if swallowing:
+                    out.append(ctx.finding(
+                        self, swallowing[0],
+                        "while True retries swallowed failures with no "
+                        "attempt budget or backoff — a persistent fault "
+                        "busy-spins forever; bound the retries (re-raise "
+                        "on exhaustion) or pace them (sleep/backoff)",
+                    ))
+                    break
+        return out
