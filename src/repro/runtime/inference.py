@@ -30,6 +30,14 @@ folds it out of the hot path entirely:
     run data-parallel over the host mesh via ``shard_map`` on the batch
     axis (each device runs the whole optical forward on its batch shard;
     a DONN's phases are tiny, so pure DP is the right layout).
+5.  **Row-sharded (model-parallel) serving** — ``model_devices=k`` puts
+    the engine on the canonical 2-D ``(data, model)`` mesh
+    (``sharding.make_mesh_2d`` + the ``donn_rules`` table): frozen
+    modulation stacks, TF planes and detector masks shard their field
+    rows over ``model`` and every hop runs the in-scan pencil FFT
+    (``pencil_fft.local_spectral_pair``), so planes too large for one
+    chip serve through the same bucketed executables; composes with the
+    batch-axis DP above on one mesh.
 
 Measured in ``benchmarks/bench_inference_throughput.py``; served by
 ``repro.launch.serve_donn``.
@@ -49,6 +57,7 @@ import numpy as np
 from repro.core import diffraction as df
 from repro.core.laser import data_to_cplex, data_to_real
 from repro.data.pipeline import bucket_for, pad_batch
+from repro.runtime import sharding as shd
 from repro.runtime.resilience import DeadlineExceededError, OverloadedError
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
@@ -259,13 +268,19 @@ class InferenceEngine:
       alias a live caller array);
     - ``warmup()`` pays every bucket's compile at deploy time;
     - buckets of at least ``dp_min_bucket`` rows dispatch data-parallel
-      over ``mesh_devices`` devices via ``shard_map`` on the batch axis.
+      over ``mesh_devices`` devices via ``shard_map`` on the batch axis;
+    - ``model_devices=k`` row-shards the frozen planes / TF stacks /
+      detector masks over the ``model`` axis of the 2-D ``(data, model)``
+      mesh and runs pencil-FFT hops — frozen stacks too large for one
+      chip serve without replicating any plane (classify family, unpadded
+      angular-spectrum plans).
     """
 
     def __init__(self, deployed: DeployedDONN,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  donate: bool = True, mesh_devices: Optional[int] = None,
-                 dp_min_bucket: int = 8):
+                 dp_min_bucket: int = 8,
+                 model_devices: Optional[int] = None):
         self.deployed = deployed
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         if not self.buckets or self.buckets[0] < 1:
@@ -273,28 +288,61 @@ class InferenceEngine:
         self.donate = donate
         self.dp_min_bucket = int(dp_min_bucket)
         self.ndev = int(mesh_devices) if mesh_devices else 1
-        if self.ndev > jax.device_count():
+        self.mp = int(model_devices) if model_devices else 1
+        if self.ndev < 1 or self.mp < 1:
+            raise ValueError("mesh_devices/model_devices must be >= 1")
+        if self.ndev * self.mp > jax.device_count():
             raise ValueError(
-                f"mesh_devices={self.ndev} exceeds the {jax.device_count()} "
-                "available devices"
+                f"mesh needs {self.ndev * self.mp} devices ({self.ndev} "
+                f"data x {self.mp} model), have {jax.device_count()}"
             )
-        if self.ndev > 1 and deployed.heterogeneous:
+        if (self.ndev > 1 or self.mp > 1) and deployed.heterogeneous:
             raise NotImplementedError(
                 "multi-device dispatch covers uniform plans (segmented "
                 "frozen planes are a ragged pytree; flatten is a follow-on)"
             )
+        if self.mp > 1:
+            cfg = deployed.cfg
+            if deployed.family != "cls":
+                raise NotImplementedError(
+                    "row-sharded serving covers the classify family; RGB "
+                    "and segmentation row-shard on the training path only "
+                    "for now (donn_steps.make_donn_sharded_loss)"
+                )
+            if deployed.rfft_first:
+                raise NotImplementedError(
+                    "rfft_first's half-spectrum entry hop is not row-"
+                    "shardable; freeze with rfft_first=False to serve "
+                    "model-parallel"
+                )
+            if cfg.use_pallas:
+                raise NotImplementedError(
+                    "the fused Pallas kernels operate on full planes"
+                )
+            if cfg.pad or any(l.approximation == "fraunhofer"
+                              for l in cfg.resolved_layers()):
+                raise NotImplementedError(
+                    "row-sharded serving needs unpadded angular-spectrum "
+                    "hops (the spectral-override contract, plan._hop)"
+                )
+            n = deployed.plan.grid.n
+            if n % self.mp:
+                raise ValueError(
+                    f"field rows n={n} not divisible by "
+                    f"model_devices={self.mp}"
+                )
         self._mesh = None
+        self._rules = None
         self._x_sharding = None
-        if self.ndev > 1:
-            from jax.sharding import NamedSharding, PartitionSpec as P
+        if self.ndev > 1 or self.mp > 1:
+            from jax.sharding import NamedSharding
 
-            from repro.compat import make_mesh
-
-            self._mesh = make_mesh((self.ndev,), ("data",))
-            self._x_sharding = NamedSharding(
-                self._mesh,
-                P(*(("data",) + (None,) * (self._x_ndim() - 1))),
-            )
+            self._mesh = shd.make_mesh_2d(data=self.ndev, model=self.mp)
+            self._rules = shd.donn_rules()
+            if self.ndev > 1:
+                self._x_sharding = NamedSharding(
+                    self._mesh, shd.dim0_pspec("data", self._x_ndim())
+                )
         # hot-path pin: {(input shape, dtype): compiled} — infer() does a
         # plain dict lookup; cached_executable stays the cross-engine
         # sharing layer behind it (first build per shape goes through it)
@@ -312,7 +360,7 @@ class InferenceEngine:
         return np.zeros(shape, np.float32)
 
     def _dp(self, bucket: int) -> bool:
-        return (self._mesh is not None and bucket >= self.dp_min_bucket
+        return (self.ndev > 1 and bucket >= self.dp_min_bucket
                 and bucket % self.ndev == 0)
 
     # --- compiled program per bucket ---
@@ -330,23 +378,75 @@ class InferenceEngine:
         def fwd(x, frozen):
             return dep.forward(x, frozen=frozen)
 
-        if dp:
-            from jax.sharding import PartitionSpec as P
+        if self.mp > 1:
+            from repro.compat import shard_map
+            from repro.runtime.donn_steps import _plan_tf_stacks
+            from repro.runtime.pencil_fft import local_spectral_pair
 
+            # Row-sharded serving: the frozen modulation stacks, the TF
+            # planes and the detector masks all shard field rows over
+            # "model"; every hop of the frozen scan runs the in-scan
+            # pencil FFT and the per-class partial readout psums over
+            # "model".  Composes with batch DP over "data" on the same
+            # mesh (u0 is built in auto land so GSPMD places the entry
+            # encode; tf/mask stacks are config statics, closed over like
+            # the baked plan constants they replace).
+            mesh, rules, mp = self._mesh, self._rules, self.mp
+            plan = dep.plan
+            spectral = local_spectral_pair("model", mp)
+            tf_a, tf_b = _plan_tf_stacks(plan)
+            masks = jnp.asarray(dep.detector.masks)
+            bax = "batch" if dp else None
+            u_spec = shd.rules_pspec((bax, "field_h", "field_w"),
+                                     rules, mesh)
+            tf_spec = shd.rules_pspec(("layers", "field_h", "field_w"),
+                                      rules, mesh)
+            m_spec = shd.rules_pspec(("classes", "field_h", "field_w"),
+                                     rules, mesh)
+            frozen_specs = jax.tree.map(
+                lambda a: shd.operand_pspec(
+                    jnp.shape(a), ("layers", "field_h", "field_w"),
+                    mesh, rules,
+                ),
+                tuple(dep.frozen),
+            )
+            out_spec = shd.rules_pspec((bax, None), rules, mesh)
+
+            def local_logits(u, a, b, m, fz):
+                u = plan.forward(None, u, tfs=(a, b), spectral=spectral,
+                                 frozen=fz)
+                u = plan.propagate_final(u, tfs=(a, b), spectral=spectral)
+                part = jnp.einsum("...hw,chw->...c", df.intensity(u), m)
+                return jax.lax.psum(part, "model")
+
+            sharded = shard_map(
+                local_logits, mesh=mesh,
+                in_specs=(u_spec, tf_spec, tf_spec, m_spec, frozen_specs),
+                out_specs=out_spec, check_vma=False,
+            )
+
+            def run(x, frozen):
+                u = data_to_cplex(x, dep.in_n) * dep.source
+                return sharded(u, tf_a, tf_b, masks, tuple(frozen))
+
+            fn = run
+        elif dp:
             from repro.compat import shard_map
 
             mesh = self._mesh
-            x_spec = P(*(("data",) + (None,) * (self._x_ndim() - 1)))
+            x_spec = shd.dim0_pspec("data", self._x_ndim())
             # frozen planes replicate; the batch axis shards.  Every device
             # runs the full optical forward on its local rows — pure DP,
             # zero cross-device collectives in the hot loop.  The spec tree
             # mirrors the frozen tuple (2 leaves f32/bf16 storage, 4 with
             # int8 quantized planes + their per-layer scales).
             frozen_specs = jax.tree.map(
-                lambda a: P(*((None,) * jnp.ndim(a))), tuple(dep.frozen)
+                lambda a: shd.replicated_pspec(jnp.ndim(a)),
+                tuple(dep.frozen),
             )
-            out_nd = 3 if dep.family == "seg" else 2
-            out_spec = P(*(("data",) + (None,) * (out_nd - 1)))
+            out_spec = shd.dim0_pspec(
+                "data", 3 if dep.family == "seg" else 2
+            )
 
             def run(x, frozen):
                 return shard_map(
@@ -357,7 +457,9 @@ class InferenceEngine:
             fn = run
         else:
             fn = fwd
-        key = dep.static_key() + ("dp", self.ndev if dp else 1, self.donate)
+        key = dep.static_key() + (
+            "dp", self.ndev if dp else 1, "mp", self.mp, self.donate
+        )
         with warnings.catch_warnings():
             # donation only pays when an output aval matches the request
             # buffer (e.g. full-res segmentation maps); elsewhere it just

@@ -22,6 +22,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.nn import ParamSpec, is_spec
 
+class ShardingRulesError(ValueError):
+    """A rules table maps conflicting logical axes onto one mesh axis.
+
+    Raised (rather than silently picking a winner) when ``batch`` and
+    ``field_h`` — the two axes that define the 2-D ``(data, model)``
+    layout — claim the same mesh axis: sharding the batch and the field
+    rows over one axis would make every device see a *different* row
+    block of a *different* batch shard, which is never the intended
+    layout and produces silently wrong psums.
+    """
+
+
 DEFAULT_RULES: dict[str, Any] = {
     "batch": ("pod", "data"),
     "seq": "model",  # Megatron-style sequence parallelism: the residual
@@ -43,7 +55,68 @@ DEFAULT_RULES: dict[str, Any] = {
     "layers": None,
     "field_h": None,
     "field_w": "model",
+    "population": ("pod", "data"),  # DSE candidate stacks: generations of
+    #                  K candidates shard over the DP axes, composing with
+    #                  field_h -> model (population x spatial on one mesh)
+    "classes": None,
 }
+
+
+def donn_rules(*, data="data", model="model") -> dict:
+    """THE unified DONN rules table for the 2-D ``(data, model)`` mesh.
+
+    One table consumed by training (``donn_steps.make_donn_sharded_loss``),
+    serving (``InferenceEngine(model_devices=...)``) and DSE stacks:
+
+      batch / population -> (pod, data)   data parallel
+      field_h            -> model         spatial rows (pencil FFT)
+      field_w / channel  -> replicated    (W is the locally-full FFT axis)
+
+    Validated by :func:`check_rules` — ``batch`` and ``field_h`` on the
+    same mesh axis raise :class:`ShardingRulesError`.
+    """
+    return check_rules({
+        **DEFAULT_RULES,
+        "batch": ("pod", data),
+        "population": ("pod", data),
+        "field_h": model,
+        "field_w": None,
+    })
+
+
+def check_rules(rules: Mapping[str, Any]) -> Mapping[str, Any]:
+    """Typed validation of a rules table: batch/field_h must not collide."""
+    def flat(v):
+        return () if v is None else ((v,) if isinstance(v, str) else tuple(v))
+
+    overlap = set(flat(rules.get("batch"))) & set(flat(rules.get("field_h")))
+    if overlap:
+        raise ShardingRulesError(
+            f"'batch' and 'field_h' both map onto mesh axis "
+            f"{sorted(overlap)[0]!r}: the data and spatial layouts would "
+            f"alias — give each its own mesh axis (see make_mesh_2d)"
+        )
+    return rules
+
+
+def make_mesh_2d(data: int = 1, model: int = 1, *, devices=None) -> Mesh:
+    """The canonical 2-D ``(data, model)`` mesh every DONN consumer uses.
+
+    ``data`` x ``model`` devices (defaults: 1x1, valid on a single host
+    device): batch/population shard over ``data``, field rows over
+    ``model`` (pencil FFT).  Replaces the ad-hoc per-call-site
+    ``compat.make_mesh`` constructions — one entry point, one axis-name
+    spelling, paired with the :func:`donn_rules` table.
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    need = int(data) * int(model)
+    if need > len(devs):
+        raise ValueError(
+            f"make_mesh_2d needs {need} devices "
+            f"({data} data x {model} model), have {len(devs)}"
+        )
+    arr = np.asarray(devs[:need], dtype=object).reshape(int(data), int(model))
+    return Mesh(arr, ("data", "model"))
 
 
 def spatial_rules(axis: str = "model") -> dict:
@@ -83,6 +156,82 @@ def _present(mesh: Mesh, axes):
     return kept if len(kept) > 1 else kept[0]
 
 
+def present_axes(mesh: Mesh, axes):
+    """Public form of :func:`_present` (rule axes filtered to the mesh)."""
+    return _present(mesh, axes)
+
+
+def _flat_axes(axes) -> tuple:
+    return () if axes is None else (
+        (axes,) if isinstance(axes, str) else tuple(axes)
+    )
+
+
+def _check_batch_field_collision(logical_axes, mesh, rules) -> None:
+    """Typed error when batch and field_h resolve onto one mesh axis."""
+    names = [n for n in logical_axes if n]
+    if "batch" not in names or "field_h" not in names:
+        return
+    b = set(_flat_axes(_present(mesh, rules.get("batch"))))
+    h = set(_flat_axes(_present(mesh, rules.get("field_h"))))
+    if b & h:
+        raise ShardingRulesError(
+            f"'batch' and 'field_h' both resolve to mesh axis "
+            f"{sorted(b & h)[0]!r} on {tuple(mesh.shape)}: refusing to "
+            f"silently pick a winner — fix the rules table (donn_rules "
+            f"gives batch->data, field_h->model)"
+        )
+
+
+def rules_pspec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[Mapping[str, Any]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Logical axis names -> PartitionSpec through the rules table.
+
+    The shard_map companion of :func:`resolve_pspec`: manual-region
+    in/out specs must divide exactly (shard_map checks shapes itself),
+    so there is no shape/divisibility fallback here — but duplicate mesh
+    -axis use across dims raises :class:`ShardingRulesError` instead of
+    silently mis-sharding.  With ``mesh`` given, rule axes absent from
+    the mesh drop to replicated (so one spec spelling serves 1-D and
+    2-D meshes).
+    """
+    rules = rules or DEFAULT_RULES
+    out, used = [], set()
+    for name in logical_axes:
+        axes = rules.get(name) if name else None
+        if mesh is not None:
+            axes = _present(mesh, axes)
+        flat = _flat_axes(axes)
+        dup = sorted(set(flat) & used)
+        if dup:
+            raise ShardingRulesError(
+                f"mesh axis {dup[0]!r} claimed by more than one logical "
+                f"axis in {tuple(logical_axes)}"
+            )
+        used.update(flat)
+        out.append(axes if flat else None)
+    return P(*out)
+
+
+def dim0_pspec(axes, ndim: int) -> P:
+    """PartitionSpec sharding dim 0 over ``axes``, rest replicated."""
+    if not _flat_axes(axes):
+        return P(*([None] * ndim))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def replicated_pspec(ndim: int = 0) -> P:
+    return P(*([None] * ndim))
+
+
+def with_leading(spec: P, lead: int = 1) -> P:
+    """Shift a spec right of ``lead`` unsharded leading axes (chunk dims)."""
+    return P(*((None,) * lead + tuple(spec)))
+
+
 def resolve_pspec(
     shape: Sequence[int],
     logical_axes: Sequence[Optional[str]],
@@ -93,9 +242,15 @@ def resolve_pspec(
 
     A mesh axis is consumed at most once per array (first dim wins), so
     fallback rules — e.g. kv_heads and head both mapping to "model" — give
-    "shard whichever dim divides, preferring the earlier one".
+    "shard whichever dim divides, preferring the earlier one".  The one
+    pair that does NOT silently fall back is ``batch``/``field_h``: both
+    resolving to one mesh axis is a rules-table bug (the 2-D layouts
+    alias) and raises :class:`ShardingRulesError`.  A ``field_h`` dim not
+    divisible by the model-axis extent cleanly drops to replicated like
+    every other dim.
     """
     rules = rules or DEFAULT_RULES
+    _check_batch_field_collision(logical_axes, mesh, rules)
     out = []
     used: set = set()
     for dim, name in zip(shape, logical_axes):
@@ -113,6 +268,22 @@ def resolve_pspec(
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+def operand_pspec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, Any]] = None,
+) -> P:
+    """:func:`resolve_pspec` without the trailing-None trim.
+
+    shard_map operand specs must be full rank, but still want the
+    divisibility fallback (e.g. the (L, 1, 1) int8 plane scales riding a
+    row-sharded frozen stack replicate instead of erroring).
+    """
+    spec = tuple(resolve_pspec(shape, logical_axes, mesh, rules))
+    return P(*(spec + (None,) * (len(tuple(shape)) - len(spec))))
 
 
 def spec_sharding(spec: ParamSpec, mesh: Mesh, rules=None) -> NamedSharding:

@@ -1,0 +1,19 @@
+"""LR109 bad: hand-built specs and ad-hoc meshes outside the rules table."""
+import jax
+import jax.sharding
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import make_mesh
+
+
+def dispatch_specs(ndev):
+    # hard-coded axis strings: the rules table should resolve these
+    x_spec = P("data", None, None)
+    out_spec = jax.sharding.PartitionSpec("data", None)
+    return x_spec, out_spec
+
+
+def build_mesh(devices):
+    mesh = make_mesh((2, 4), ("data", "model"))  # ad-hoc axis spelling
+    raw = Mesh(devices, ("dp", "tp"))  # a third spelling of the same axes
+    return mesh, raw

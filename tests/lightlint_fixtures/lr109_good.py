@@ -1,0 +1,13 @@
+"""LR109 good: specs and meshes routed through the one rules table."""
+from repro.runtime import sharding as shd
+
+
+def dispatch_specs(mesh):
+    rules = shd.donn_rules()
+    x_spec = shd.rules_pspec(("batch", "field_h", "field_w"), rules, mesh)
+    out_spec = shd.dim0_pspec("data", 2)
+    return x_spec, out_spec
+
+
+def build_mesh():
+    return shd.make_mesh_2d(data=2, model=4)

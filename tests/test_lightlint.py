@@ -132,6 +132,29 @@ class TestUnboundedRetryLoop:
         assert lint_fixture("lr108_good.py") == []
 
 
+# ---------------------------------------------------------------- LR109
+class TestAdHocPartitionSpec:
+    def test_fires_on_raw_specs_and_meshes(self):
+        findings = lint_fixture("lr109_bad.py")
+        assert rule_ids(findings) == {"LR109"}
+        # P(...) alias + dotted PartitionSpec + make_mesh + raw Mesh
+        assert len(findings) == 4
+        msgs = " ".join(f.message for f in findings)
+        assert "rules table" in msgs
+        assert "make_mesh_2d" in msgs
+
+    def test_silent_on_rules_table_helpers(self):
+        assert lint_fixture("lr109_good.py") == []
+
+    def test_allowlists_the_rules_table_itself(self):
+        # the same constructions inside runtime/sharding.py are the
+        # implementation, not drift — linted clean
+        path = REPO / "src" / "repro" / "runtime" / "sharding.py"
+        findings = [f for f in lint_paths([str(path)], root=str(REPO))
+                    if f.rule == "LR109"]
+        assert findings == []
+
+
 # ---------------------------------------------------------------- LR201
 class TestPhysicsConfigValidity:
     def test_fires_on_invalid_literal_configs(self):

@@ -263,19 +263,16 @@ class TestSpatialGates:
     """Unsupported configs must be rejected loudly (single-device mesh)."""
 
     def _mesh(self):
-        from repro.launch.mesh import make_mesh
+        from repro.runtime.sharding import make_mesh_2d
 
-        return make_mesh((1,), ("model",))
+        return make_mesh_2d(model=1)
 
     @pytest.mark.parametrize("kw", [
-        dict(segmentation=True, skip_from=0),
-        dict(channels=3),
         dict(pad=True),
         dict(approximation="fraunhofer"),
         dict(codesign="gumbel"),
         dict(use_pallas=True),
         dict(tf_dtype="bfloat16"),
-        dict(layers=(LayerSpec(distance=0.05, size=32),) * 3),
     ])
     def test_unsupported_config_raises(self, kw):
         from repro.runtime.donn_steps import make_donn_spatial_loss
@@ -283,6 +280,19 @@ class TestSpatialGates:
         cfg = DONNConfig(name="g", n=48, depth=3, distance=0.05, **kw)
         with pytest.raises(NotImplementedError):
             make_donn_spatial_loss(cfg, self._mesh())
+
+    @pytest.mark.parametrize("kw", [
+        dict(segmentation=True, skip_from=0),
+        dict(channels=3),
+        dict(layers=(LayerSpec(distance=0.05, size=32),) * 3),
+    ])
+    def test_formerly_gated_families_now_build(self, kw):
+        # seg-with-skip, RGB and hetero SegmentedPlan moved off the
+        # reject list when the rules-table loss took over (ISSUE 10)
+        from repro.runtime.donn_steps import make_donn_sharded_loss
+
+        cfg = DONNConfig(name="g3", n=48, depth=3, distance=0.05, **kw)
+        assert callable(make_donn_sharded_loss(cfg, self._mesh()))
 
     def test_indivisible_rows_raise(self):
         import jax as _jax

@@ -14,6 +14,7 @@ from lightlint.rules.physics_rules import (
     SpecArtifactValidity,
 )
 from lightlint.rules.runtime_rules import UnboundedRetryLoop
+from lightlint.rules.sharding_rules import AdHocPartitionSpec
 
 ALL_RULES = (
     CacheKeyCompleteness,  # LR101
@@ -24,6 +25,7 @@ ALL_RULES = (
     Bf16Accumulation,  # LR106
     ComplexPromotionInHotPath,  # LR107
     UnboundedRetryLoop,  # LR108
+    AdHocPartitionSpec,  # LR109
     PhysicsConfigValidity,  # LR201
     SpecArtifactValidity,  # LR202
 )

@@ -1,0 +1,83 @@
+"""Sharding-layout rules (LR109+).
+
+One rules table (``repro/runtime/sharding.py``) owns the mapping from
+logical axis names to mesh axes; everything else asks it.  Hand-built
+``PartitionSpec`` literals and ad-hoc mesh constructions scattered
+through runtime/bench code are how the pre-PR-10 tree grew two disjoint
+parallel paths (row-sharded training vs batch-sharded serving) with
+silently different axis-name spellings — the class of drift this rule
+pins down.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from lightlint.core import ERROR, FileContext, Finding, Rule
+from lightlint.rules.jax_rules import call_name
+
+# the one rules table and the shims that exist to *define* mesh/spec
+# construction (everything else routes through sharding.* helpers)
+_ALLOWED_SUFFIXES = (
+    "repro/runtime/sharding.py",
+    "repro/launch/mesh.py",
+    "repro/compat.py",
+    "repro/nn/module.py",
+)
+
+
+class AdHocPartitionSpec(Rule):
+    """LR109: raw ``PartitionSpec``/mesh construction outside the rules table.
+
+    Flags, outside ``repro/runtime/sharding.py`` (and the compat/mesh
+    shims that implement it):
+
+    - ``PartitionSpec(...)`` construction — including ``P(...)`` via a
+      ``from jax.sharding import PartitionSpec as P`` alias and dotted
+      ``jax.sharding.PartitionSpec(...)`` — which hard-codes mesh-axis
+      strings the rules table should resolve
+      (``sharding.rules_pspec`` / ``resolve_pspec`` / ``dim0_pspec``);
+    - ``Mesh(...)`` / ``make_mesh(...)`` ad-hoc mesh construction —
+      axis names spelled per call site; use ``sharding.make_mesh_2d``.
+    """
+
+    rule_id = "LR109"
+    title = "ad-hoc PartitionSpec/mesh construction outside runtime/sharding"
+    severity = ERROR
+
+    def visit(self, tree: ast.AST, ctx: FileContext) -> Iterable[Finding]:
+        rel = ctx.rel.replace("\\", "/")
+        if any(rel.endswith(sfx) for sfx in _ALLOWED_SUFFIXES):
+            return []
+        # names locally bound to the flagged constructors via imports
+        aliases = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module and (
+                    node.module == "jax.sharding"
+                    or node.module.endswith(".sharding")):
+                for a in node.names:
+                    if a.name in ("PartitionSpec", "Mesh"):
+                        aliases[a.asname or a.name] = a.name
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node) or ""
+            head, tail = name.split(".")[0], name.split(".")[-1]
+            if head in aliases:
+                kind = aliases[head]
+            elif tail in ("PartitionSpec", "Mesh") and "." in name:
+                kind = tail
+            elif tail == "make_mesh":
+                kind = "make_mesh"
+            else:
+                continue
+            fix = ("sharding.make_mesh_2d + the donn_rules table"
+                   if kind in ("Mesh", "make_mesh") else
+                   "sharding.rules_pspec/resolve_pspec/dim0_pspec")
+            out.append(ctx.finding(
+                self, node,
+                f"ad-hoc {kind}(...) hard-codes mesh-axis layout outside "
+                f"the rules table; route through {fix}",
+            ))
+        return out
